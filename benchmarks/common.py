@@ -1,0 +1,40 @@
+"""Benchmark timing utilities."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+__all__ = ["time_fn", "Row", "emit"]
+
+
+def time_fn(fn, *args, warmup=2, repeats=5, inner=1):
+    """Best-of-repeats wall time per call (seconds)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best
+
+
+class Row:
+    def __init__(self, name: str, seconds: float, derived: str):
+        self.name = name
+        self.seconds = seconds
+        self.derived = derived
+
+    def csv(self) -> str:
+        return f"{self.name},{self.seconds * 1e6:.1f},{self.derived}"
+
+
+def emit(rows):
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())

@@ -1,0 +1,44 @@
+"""Paper Figs. 5-6 analogue: DG SWE volume kernel GFLOP/s + GB/s vs order N."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import dg_swe
+from .common import Row, time_fn
+
+ORDERS = (1, 2, 3, 4, 5, 6, 7)
+
+
+def run(rows: list):
+    for n in ORDERS:
+        nx = 24
+        for backend in ("jnp", "loops", "native"):
+            model = "jnp" if backend == "native" else backend
+            app = dg_swe.DGVolume(model=model, nx=nx, ny=nx, n=n, jitter=0.1)
+            rng = np.random.RandomState(0)
+            Q = jnp.asarray(np.stack([
+                2.0 + 0.1 * rng.randn(app.E, app.np_),
+                0.3 * rng.randn(app.E, app.np_),
+                0.3 * rng.randn(app.E, app.np_)], -1), jnp.float32)
+            if backend == "native":
+                fn = jax.jit(lambda q: dg_swe.volume_ref(
+                    q, app.o_geom.data, app.o_db.data, app.o_dr.data,
+                    app.o_ds.data))
+                sec = time_fn(fn, Q, inner=2)
+            else:
+                if backend == "loops" and n > 4:
+                    continue
+                sec = time_fn(lambda: app.rhs_volume(Q), inner=2)
+            gflops = app.E * dg_swe.dg_flops_per_element(app.np_) / sec / 1e9
+            gbs = app.E * dg_swe.dg_bytes_per_element(app.np_, 4) / sec / 1e9
+            rows.append(Row(f"dg/{backend}/N{n}/E{app.E}", sec,
+                            f"{gflops:.2f} GFLOP/s; {gbs:.2f} GB/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run([]))

@@ -1,0 +1,40 @@
+"""Paper Fig. 2 analogue: FD kernel MNodes/s across backend expansions.
+
+Backends: jnp (vectorized XLA — the portable expansion), loops (serial
+fori — the explicit-loop expansion), native (hand-written jnp reference,
+NOT through the kernel language — measures language overhead), and
+pallas-interpret at a reduced size (correctness backend on CPU; the
+compiled Pallas path is the TPU target).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.apps import fd2d
+from .common import Row, time_fn
+
+SIZES = {"jnp": (512, 512), "native": (512, 512), "loops": (128, 128),
+         "pallas": (64, 64)}
+
+
+def run(rows: list):
+    for backend, (w, h) in SIZES.items():
+        model = "jnp" if backend == "native" else backend
+        app = fd2d.FDWave(model=model, width=w, height=h, radius=1)
+        if backend == "native":
+            step = jax.jit(lambda a, b: fd2d.reference_step(
+                a, b, app.weights, app.dx, app.dt))
+            sec = time_fn(step, app.o_u1.data, app.o_u2.data, inner=4)
+        else:
+            sec = time_fn(lambda: app.fd2d.run(app.o_u1.data, app.o_u2.data)[0],
+                          inner=4)
+        mnodes = w * h / sec / 1e6
+        rows.append(Row(f"fd2d/{backend}/{w}x{h}", sec,
+                        f"{mnodes:.1f} MNodes/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run([]))

@@ -1,0 +1,43 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. FD = paper Fig. 2; SEM = Figs. 3-4;
+DG = Figs. 5-6; attention/ssm = LM kernel hot-spots; roofline rows summarize
+the dry-run artifacts when present (full table via ``-m benchmarks.roofline``).
+"""
+
+from __future__ import annotations
+
+from . import attention, dg, fd, sem
+from .common import Row, emit
+
+
+def _roofline_rows(rows):
+    from . import roofline
+    recs = roofline.load("artifacts/dryrun")
+    ok = [r for r in recs if not r.get("skipped") and "error" not in r]
+    for r in ok:
+        a = roofline.analyze(r)
+        dom = a["dominant"]
+        rows.append(Row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            a["terms"][dom],
+            f"dominant={dom}; frac={a['roofline_fraction']:.2f}; "
+            f"6ND/HLO={a['useful_ratio']:.2f}"))
+    return rows
+
+
+def main() -> None:
+    rows = []
+    fd.run(rows)
+    sem.run(rows)
+    dg.run(rows)
+    attention.run(rows)
+    try:
+        _roofline_rows(rows)
+    except Exception as e:  # artifacts may not exist yet
+        rows.append(Row("roofline/unavailable", 0.0, str(e)[:60]))
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

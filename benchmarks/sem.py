@@ -1,0 +1,43 @@
+"""Paper Figs. 3-4 analogue: SEM operator GFLOP/s + GB/s vs order N."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import sem
+from .common import Row, time_fn
+
+ORDERS = (1, 2, 3, 4, 5, 6, 7)
+
+
+def run(rows: list):
+    for n in ORDERS:
+        nq = n + 1
+        E = max(512 // nq, 32)
+        ex = max(2, round(E ** (1 / 3)))
+        for backend in ("jnp", "loops", "native"):
+            model = "jnp" if backend == "native" else backend
+            op = sem.SEMOperator(model=model, ex=ex, ey=ex, ez=ex, n=n,
+                                 deform=0.1)
+            u = jnp.asarray(np.random.RandomState(0).randn(
+                op.E, nq, nq, nq), jnp.float32)
+            if backend == "native":
+                fn = jax.jit(lambda u_: sem.apply_ref(u_, op.o_geo.data,
+                                                      op.o_dmat.data))
+                sec = time_fn(fn, u, inner=2)
+            else:
+                if backend == "loops" and n > 4:
+                    continue  # serial expansion too slow at high order on CPU
+                sec = time_fn(lambda: op.apply_local(u), inner=2)
+            gflops = op.E * sem.sem_flops_per_element(nq) / sec / 1e9
+            gbs = op.E * sem.sem_bytes_per_element(nq, 4) / sec / 1e9
+            rows.append(Row(f"sem/{backend}/N{n}/E{op.E}", sec,
+                            f"{gflops:.2f} GFLOP/s; {gbs:.2f} GB/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+    emit(run([]))

@@ -1,0 +1,41 @@
+"""Paper §4.1 end-to-end: FD acoustic wave on every backend, with the host
+API from listing 9 (setup / timestep / swap), validated against the analytic
+standing wave.
+
+  PYTHONPATH=src python examples/fd_wave.py [--backend jnp] [--size 256]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.apps.fd2d import FDWave
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="all")
+    ap.add_argument("--size", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    backends = ("jnp", "loops", "pallas") if args.backend == "all" \
+        else (args.backend,)
+    for backend in backends:
+        n = args.size if backend == "jnp" else min(args.size, 96)
+        steps = args.steps if backend == "jnp" else min(args.steps, 40)
+        app = FDWave(model=backend, width=n, height=n, radius=2, cfl=0.3)
+        t0 = time.time()
+        app.run(steps)
+        dt = time.time() - t0
+        err = np.abs(app.solution - app.analytic()).max()
+        mnodes = n * n * steps / dt / 1e6
+        print(f"{backend:>7s}: {n}x{n}, {steps} steps, t={app.current_time:.3f} "
+              f"max|err|={err:.2e}  {mnodes:8.1f} MNodes/s")
+        assert err < 5e-2, f"{backend} diverged from analytic solution"
+    print("FD wave equation: portable across backends, matches physics")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper §4.2 end-to-end: screened-Coulomb solve with PCG on the SEM
+operator (the paper's 'most computational-intensive routine' in the PCG
+iteration is the kernel we benchmark), with gather-scatter C0 assembly and
+a manufactured solution on the deformed box.
+
+  PYTHONPATH=src python examples/sem_solve.py [--backend jnp] [--n 4]
+"""
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.sem import SEMOperator, gather, scatter_add
+
+
+def pcg(apply_A, b, M_inv, *, tol=1e-8, maxiter=200):
+    x = jnp.zeros_like(b)
+    r = b - apply_A(x)
+    z = M_inv * r
+    p = z
+    rz = jnp.vdot(r, z)
+    for it in range(maxiter):
+        Ap = apply_A(p)
+        alpha = rz / jnp.vdot(p, Ap)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        if float(jnp.linalg.norm(r)) < tol * float(jnp.linalg.norm(b)):
+            return x, it + 1
+        z = M_inv * r
+        rz_new = jnp.vdot(r, z)
+        p = z + (rz_new / rz) * p
+        rz = rz_new
+    return x, maxiter
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="jnp")
+    ap.add_argument("--n", type=int, default=4)
+    ap.add_argument("--elems", type=int, default=3)
+    args = ap.parse_args()
+
+    e = args.elems
+    # -div(grad u) + u = f on [-1,1]^3 with homogeneous Neumann BC;
+    # manufactured solution u* = cos(pi x) cos(pi y) cos(pi z).
+    op = SEMOperator(model=args.backend, ex=e, ey=e, ez=e, n=args.n,
+                     deform=0.0, alpha=1.0)
+
+    # rebuild coordinates for the rhs (host-side)
+    from repro.apps.sem import make_box_mesh
+    (x, y, z), gid, nglob = make_box_mesh(e, e, e, args.n, deform=0.0)
+    u_star = np.cos(np.pi * x) * np.cos(np.pi * y) * np.cos(np.pi * z)
+    f = (3 * np.pi ** 2 + 1.0) * u_star
+
+    # rhs = M f (lumped mass), assembled to global dofs
+    rhs_loc = jnp.asarray((op.mass * f).astype(np.float32))
+    rhs = scatter_add(rhs_loc, op.gid_j, op.nglob)
+
+    # Jacobi preconditioner from the assembled lumped mass
+    diag = scatter_add(jnp.asarray(op.mass.astype(np.float32)), op.gid_j,
+                       op.nglob)
+    M_inv = 1.0 / diag
+
+    u, iters = pcg(op.apply_global, rhs, M_inv, tol=1e-7)
+    u_loc = np.asarray(gather(u, op.gid_j))
+    err = np.abs(u_loc - u_star).max()
+    print(f"[sem] N={args.n}, E={op.E}, dofs={op.nglob}: PCG converged in "
+          f"{iters} iters, max|u - u*| = {err:.3e}")
+    assert err < 0.05, "SEM solve did not converge to the manufactured solution"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Batched serving example: train briefly, then serve batched requests with
+prefill + jitted decode steps (greedy), reporting decode throughput.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import LM
+from repro.launch.mesh import make_local_mesh
+from repro.launch.serve import generate
+from repro.launch.train import TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_2_1b")
+    ap.add_argument("--train-steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=48)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(reduced(get_config(args.arch)), vocab_size=2048)
+    model = LM(cfg)
+    mesh = make_local_mesh(model=1)
+
+    # brief training so generations aren't pure noise
+    loop = TrainLoop(model=model, mesh=mesh, global_batch=8, seq_len=64,
+                     steps=args.train_steps, verbose=False)
+    params = loop.run()["params"]
+
+    # serve a batch of prompts drawn from the same distribution
+    from repro.data import SyntheticLMData
+    data = SyntheticLMData(vocab_size=cfg.vocab_size,
+                           seq_len=args.prompt_len,
+                           global_batch=args.batch, seed=123)
+    prompts = data.batch(0)
+    out, stats = generate(model, params, prompts, gen_tokens=args.gen,
+                          mesh=mesh)
+    print(f"[serve] prefill {stats['prefill_s']:.2f}s | "
+          f"decode {stats['tokens_per_s']:.1f} tok/s "
+          f"(batch={args.batch}, gen={out.shape[1]})")
+    print("[serve] prompt -> continuation (first request):")
+    print("   ", prompts[0, -8:].tolist(), "->", out[0, :12].tolist())
+    assert np.isfinite(stats["tokens_per_s"]) and out.shape[0] == args.batch
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end LM training driver: fault-tolerant loop, checkpoint + resume,
+loss curve on the deterministic Markov corpus.
+
+CPU-sized default (~15M params, a few hundred steps, minutes). On real
+hardware pass --full for the ~1B-class config and a production mesh; the
+same code path (sharded train step, ZeRO-1, remat) is what the multi-pod
+dry-run lowers for 512 chips.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models import LM
+from repro.runtime import FailureInjector
+from repro.launch.mesh import make_local_mesh
+from repro.launch.train import TrainLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_2_1b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full public config (real hardware)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--inject-failure", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = dataclasses.replace(
+            reduced(cfg), d_model=args.d_model, n_layers=args.layers,
+            d_ff=4 * args.d_model, vocab_size=2048,
+            head_dim=args.d_model // 4)
+    model = LM(cfg)
+    n_params = model.param_count(
+        jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))))
+    print(f"[example] {cfg.name}: {n_params / 1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.global_batch} x {args.seq_len}")
+
+    injector = (FailureInjector([args.inject_failure])
+                if args.inject_failure else None)
+    loop = TrainLoop(model=model, mesh=make_local_mesh(model=1),
+                     global_batch=args.global_batch, seq_len=args.seq_len,
+                     steps=args.steps, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=100, peak_lr=1e-3, injector=injector,
+                     log_every=25)
+    out = loop.run()
+    h = out["history"]
+    print(f"[example] loss {h[0]:.3f} -> {h[-1]:.3f} "
+          f"({'improved' if h[-1] < h[0] - 0.5 else 'check hyperparams'})")
+    assert h[-1] < h[0], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

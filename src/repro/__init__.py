@@ -1,0 +1,15 @@
+"""repro — OCCA (2014) rebuilt as a production JAX/TPU framework.
+
+Layers:
+  repro.core      the paper: unified kernel language + host API + autotuner
+  repro.apps      paper §4 numerical methods (FD / SEM / DG-SWE)
+  repro.kernels   Pallas TPU kernels (flash attention fwd/bwd/decode, ssm, rmsnorm)
+  repro.layers    attention/MLP/MoE/mamba blocks
+  repro.models    unified LM over the assigned architecture pool
+  repro.configs   architecture configs + input-shape grid
+  repro.parallel  sharding rules, step builders, pipeline parallelism
+  repro.data/optim/checkpoint/runtime   training substrate
+  repro.launch    mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "1.0.0"

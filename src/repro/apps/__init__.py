@@ -1,0 +1,4 @@
+"""The paper's three numerical applications (§4), each written once in the
+unified kernel language and runnable on every backend."""
+
+from . import dg_swe, fd2d, numerics, sem  # noqa: F401

@@ -1,0 +1,370 @@
+"""Paper §4.3 — discontinuous-Galerkin shallow-water VOLUME kernel (the
+kernel the paper profiles in Figs. 5-6), in the unified kernel language.
+
+rhs_vol = -(dF/dx + dG/dy) + S on nodal triangles, with affine per-element
+geometric factors and bathymetry source  S = (0, -g h B_x, -g h B_y).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import Device, Spec, Tile
+from .numerics import dmatrices_2d, triangle_nodes
+
+__all__ = [
+    "dg_volume_builder", "DGVolume", "make_tri_mesh", "volume_ref",
+    "dg_flops_per_element", "dg_bytes_per_element", "GRAV",
+]
+
+GRAV = 9.81
+
+
+def dg_volume_builder(D):
+    """Defines: E, np_ (nodes/element), eb, g, dtype."""
+    dtype = jnp.dtype(D.dtype)
+    np_, eb, g = D.np_, D.eb, D.g
+
+    def body(ctx, q, geom, db, dr, ds, out):
+        Q = q[...]                          # (eb, np_, 3)
+        Ge = geom[...]                      # (eb, 4): rx, sx, ry, sy
+        dB = db[...]                        # (eb, np_, 2): B_x, B_y
+        Dr = ctx.cache(dr)                  # (np_, np_) shared
+        Ds = ctx.cache(ds)
+        ctx.barrier()
+
+        h, hu, hv = Q[..., 0], Q[..., 1], Q[..., 2]
+        u = hu / h
+        v = hv / h
+        gh2 = 0.5 * g * h * h
+        F = jnp.stack([hu, hu * u + gh2, hu * v], axis=-1)
+        G = jnp.stack([hv, hu * v, hv * v + gh2], axis=-1)
+
+        DrF = jnp.einsum("nm,emf->enf", Dr, F)
+        DsF = jnp.einsum("nm,emf->enf", Ds, F)
+        DrG = jnp.einsum("nm,emf->enf", Dr, G)
+        DsG = jnp.einsum("nm,emf->enf", Ds, G)
+        rx = Ge[:, 0][:, None, None]
+        sx = Ge[:, 1][:, None, None]
+        ry = Ge[:, 2][:, None, None]
+        sy = Ge[:, 3][:, None, None]
+        dFdx = rx * DrF + sx * DsF
+        dGdy = ry * DrG + sy * DsG
+
+        zeros = jnp.zeros_like(h)
+        S = jnp.stack([zeros, -g * h * dB[..., 0], -g * h * dB[..., 1]], axis=-1)
+        out[...] = (-(dFdx + dGdy) + S).astype(dtype)
+
+    return Spec(
+        "dg_swe_volume",
+        grid=(D.E // eb,),
+        inputs=[
+            Tile("q", (D.E, np_, 3), dtype, block=(eb, np_, 3),
+                 index=lambda e: (e, 0, 0)),
+            Tile("geom", (D.E, 4), dtype, block=(eb, 4), index=lambda e: (e, 0)),
+            Tile("db", (D.E, np_, 2), dtype, block=(eb, np_, 2),
+                 index=lambda e: (e, 0, 0)),
+            Tile("dr", (np_, np_), dtype),
+            Tile("ds", (np_, np_), dtype),
+        ],
+        outputs=[Tile("out", (D.E, np_, 3), dtype, block=(eb, np_, 3),
+                      index=lambda e: (e, 0, 0))],
+        body=body,
+    )
+
+
+def volume_ref(Q, geom, dB, Dr, Ds, g=GRAV):
+    """Independent pure-jnp oracle."""
+    h, hu, hv = Q[..., 0], Q[..., 1], Q[..., 2]
+    u, v = hu / h, hv / h
+    gh2 = 0.5 * g * h * h
+    F = jnp.stack([hu, hu * u + gh2, hu * v], -1)
+    G = jnp.stack([hv, hu * v, hv * v + gh2], -1)
+    dFdx = (geom[:, 0][:, None, None] * jnp.einsum("nm,emf->enf", Dr, F)
+            + geom[:, 1][:, None, None] * jnp.einsum("nm,emf->enf", Ds, F))
+    dGdy = (geom[:, 2][:, None, None] * jnp.einsum("nm,emf->enf", Dr, G)
+            + geom[:, 3][:, None, None] * jnp.einsum("nm,emf->enf", Ds, G))
+    S = jnp.stack([jnp.zeros_like(h), -g * h * dB[..., 0], -g * h * dB[..., 1]], -1)
+    return -(dFdx + dGdy) + S
+
+
+def dg_flops_per_element(np_: int) -> int:
+    return 4 * 2 * np_ * np_ * 3 + 30 * np_
+
+
+def dg_bytes_per_element(np_: int, itemsize: int) -> int:
+    return (3 + 3 + 2) * np_ * itemsize + 4 * itemsize
+
+
+def make_tri_mesh(nx: int, ny: int, n: int, *, seed: int = 0, jitter: float = 0.0):
+    """Structured triangulation of [-1,1]^2 (2 triangles per quad) with nodal
+    coordinates and affine geometric factors. Returns dict of arrays."""
+    r, s = triangle_nodes(n)
+    Dr, Ds, V = dmatrices_2d(n, r, s)
+    np_ = len(r)
+
+    xv = np.linspace(-1, 1, nx + 1)
+    yv = np.linspace(-1, 1, ny + 1)
+    rng = np.random.RandomState(seed)
+    VX, VY = np.meshgrid(xv, yv, indexing="ij")
+    if jitter:
+        intx = slice(1, nx), slice(1, ny)
+        VX = VX.copy(); VY = VY.copy()
+        VX[1:nx, 1:ny] += jitter * (2 / nx) * (rng.rand(nx - 1, ny - 1) - 0.5)
+        VY[1:nx, 1:ny] += jitter * (2 / ny) * (rng.rand(nx - 1, ny - 1) - 0.5)
+
+    tris = []
+    for i in range(nx):
+        for j in range(ny):
+            v00 = (i, j); v10 = (i + 1, j); v01 = (i, j + 1); v11 = (i + 1, j + 1)
+            tris.append((v00, v10, v11))
+            tris.append((v00, v11, v01))
+    E = len(tris)
+    x = np.zeros((E, np_))
+    y = np.zeros((E, np_))
+    geom = np.zeros((E, 4))
+    Js = np.zeros(E)
+    for e, (a, b, c) in enumerate(tris):
+        xa, ya = VX[a], VY[a]
+        xb, yb = VX[b], VY[b]
+        xc, yc = VX[c], VY[c]
+        # affine map from reference (r,s) in [-1,1] triangle
+        x[e] = 0.5 * (-(r + s) * xa + (1 + r) * xb + (1 + s) * xc)
+        y[e] = 0.5 * (-(r + s) * ya + (1 + r) * yb + (1 + s) * yc)
+        xr, xs = 0.5 * (xb - xa), 0.5 * (xc - xa)
+        yr, ys = 0.5 * (yb - ya), 0.5 * (yc - ya)
+        J = xr * ys - xs * yr
+        assert J > 0, "negative element Jacobian"
+        geom[e] = (ys / J, -yr / J, -xs / J, xr / J)  # rx, sx, ry, sy
+        Js[e] = J
+    return dict(x=x, y=y, geom=geom, J=Js, Dr=Dr, Ds=Ds, V=V, np_=np_, E=E,
+                r=r, s=s)
+
+
+class DGVolume:
+    """Host driver for the DG SWE volume kernel."""
+
+    def __init__(self, *, model: str = "jnp", nx: int = 8, ny: int = 8, n: int = 3,
+                 eb: int | None = None, dtype="float32", bathymetry=None,
+                 jitter: float = 0.2, seed: int = 0):
+        self.device = Device(model)
+        m = make_tri_mesh(nx, ny, n, seed=seed, jitter=jitter)
+        self.mesh = m
+        self.n, self.np_, self.E = n, m["np_"], m["E"]
+        self.eb = eb or min(self.E, 16)
+        while self.E % self.eb:
+            self.eb -= 1
+        self.dtype = np.dtype(dtype)
+
+        if bathymetry is None:
+            B = np.zeros((self.E, self.np_))
+        else:
+            B = bathymetry(m["x"], m["y"])
+        dBdr = B @ m["Dr"].T
+        dBds = B @ m["Ds"].T
+        dBdx = m["geom"][:, 0][:, None] * dBdr + m["geom"][:, 1][:, None] * dBds
+        dBdy = m["geom"][:, 2][:, None] * dBdr + m["geom"][:, 3][:, None] * dBds
+        self.B = B
+        self.dB = np.stack([dBdx, dBdy], axis=-1)
+
+        self.o_geom = self.device.malloc(m["geom"].astype(self.dtype))
+        self.o_db = self.device.malloc(self.dB.astype(self.dtype))
+        self.o_dr = self.device.malloc(m["Dr"].astype(self.dtype))
+        self.o_ds = self.device.malloc(m["Ds"].astype(self.dtype))
+        defines = dict(E=self.E, np_=self.np_, eb=self.eb, g=GRAV,
+                       dtype=str(self.dtype))
+        self.kernel = self.device.build_kernel(dg_volume_builder, defines)
+
+    def rhs_volume(self, Q):
+        (out,) = self.kernel.run(jnp.asarray(Q, self.dtype), self.o_geom.data,
+                                 self.o_db.data, self.o_dr.data, self.o_ds.data)
+        return out
+
+
+# ===========================================================================
+# Surface kernel + full SWE solver (paper §4.3 completed: volume + surface
+# + LSERK time integration with reflective-wall boundaries)
+# ===========================================================================
+
+from .numerics import face_mask, lift_matrix  # noqa: E402
+
+
+def build_connectivity(nx, ny, n, mesh, seed=0):
+    """Face-to-face node maps for the structured triangulation.
+
+    Returns vmapM/vmapP as (E, 3, Nfp) int32 GLOBAL node ids (element-major
+    node numbering) with vmapP == vmapM on boundary faces (wall sentinel
+    handled via the bc mask), plus per-face normals and Fscale.
+    """
+    r, s = mesh["r"], mesh["s"]
+    nq = n + 1
+    fmask = face_mask(n, r, s)
+    E, np_ = mesh["E"], mesh["np_"]
+    x, y = mesh["x"], mesh["y"]
+
+    # per-face outward normals / surface jacobians from the inverse metric:
+    # reference-face normals f0=(0,-1) (s=-1), f1=(1,1) (r+s=0), f2=(-1,0)
+    J = mesh["J"]
+    rx, sx, ry, sy = (mesh["geom"][:, i] for i in range(4))
+    nrm = np.zeros((E, 3, 2))
+    sJ = np.zeros((E, 3))
+    for f, (nr_, ns_) in enumerate(((0.0, -1.0), (1.0, 1.0), (-1.0, 0.0))):
+        nxv = nr_ * rx + ns_ * sx
+        nyv = nr_ * ry + ns_ * sy
+        mag = np.sqrt(nxv ** 2 + nyv ** 2)
+        nrm[:, f, 0] = nxv / mag
+        nrm[:, f, 1] = nyv / mag
+        sJ[:, f] = mag * J
+    fscale = sJ / J[:, None]
+
+    # connectivity by matching face node coordinates
+    vmapM = np.zeros((E, 3, nq), np.int64)
+    vmapP = np.zeros((E, 3, nq), np.int64)
+    for e in range(E):
+        for f in range(3):
+            vmapM[e, f] = e * np_ + fmask[f]
+    # face centers for matching
+    fx = x.reshape(E, np_)[:, fmask]          # (E, 3, nfp)
+    fy = y.reshape(E, np_)[:, fmask]
+    centers = {}
+    for e in range(E):
+        for f in range(3):
+            key = (round(float(fx[e, f].mean()), 8), round(float(fy[e, f].mean()), 8))
+            centers.setdefault(key, []).append((e, f))
+    boundary = np.zeros((E, 3), bool)
+    for key, faces in centers.items():
+        if len(faces) == 1:
+            e, f = faces[0]
+            vmapP[e, f] = vmapM[e, f]
+            boundary[e, f] = True
+            continue
+        (e1, f1), (e2, f2) = faces
+        # match nodes by coordinates
+        for (ea, fa, eb, fb) in ((e1, f1, e2, f2), (e2, f2, e1, f1)):
+            xa, ya = fx[ea, fa], fy[ea, fa]
+            xb, yb = fx[eb, fb], fy[eb, fb]
+            d2 = (xa[:, None] - xb[None, :]) ** 2 + (ya[:, None] - yb[None, :]) ** 2
+            match = d2.argmin(axis=1)
+            assert (np.sort(match) == np.arange(nq)).all()
+            vmapP[ea, fa] = eb * np_ + fmask[fb][match]
+    return dict(fmask=fmask, vmapM=vmapM.astype(np.int32),
+                vmapP=vmapP.astype(np.int32), normals=nrm, fscale=fscale,
+                boundary=boundary,
+                lift=lift_matrix(n, r, s, mesh["V"], fmask))
+
+
+def dg_surface_builder(D):
+    """Surface kernel: numerical flux (local Lax-Friedrichs) + LIFT.
+
+    The face-neighbor gather (the 'communication') happens OUTSIDE the
+    kernel (GPU-DG practice); the kernel consumes pre-gathered face traces.
+    Defines: E, np_, nfp3, eb, g, dtype.
+    """
+    dtype = jnp.dtype(D.dtype)
+    np_, nfp3, eb, g = D.np_, D.nfp3, D.eb, D.g
+
+    def body(ctx, qm, qp, nrm, lift, out):
+        QM = qm[...]                      # (eb, 3nfp, 3)
+        QP = qp[...]
+        Ge = nrm[...]                     # (eb, 3nfp, 3): nx, ny, fscale
+        L = ctx.cache(lift)               # (np_, 3nfp) shared
+        ctx.barrier()
+        nx_, ny_, fsc = Ge[..., 0], Ge[..., 1], Ge[..., 2]
+
+        def flux(Q):
+            h, hu, hv = Q[..., 0], Q[..., 1], Q[..., 2]
+            u, v = hu / h, hv / h
+            gh2 = 0.5 * g * h * h
+            Fn = jnp.stack([hu * nx_ + hv * ny_,
+                            (hu * u + gh2) * nx_ + hu * v * ny_,
+                            hu * v * nx_ + (hv * v + gh2) * ny_], -1)
+            lam = jnp.abs(u * nx_ + v * ny_) + jnp.sqrt(g * h)
+            return Fn, lam
+
+        FM, lamM = flux(QM)
+        FP, lamP = flux(QP)
+        C = jnp.maximum(lamM, lamP)[..., None]
+        fstar = 0.5 * (FM + FP) + 0.5 * C * (QM - QP)
+        dflux = (FM - fstar) * fsc[..., None]              # (eb, 3nfp, 3)
+        out[...] = jnp.einsum("nf,efq->enq", L, dflux).astype(dtype)
+
+    return Spec(
+        "dg_swe_surface",
+        grid=(D.E // eb,),
+        inputs=[
+            Tile("qm", (D.E, nfp3, 3), dtype, block=(eb, nfp3, 3),
+                 index=lambda e: (e, 0, 0)),
+            Tile("qp", (D.E, nfp3, 3), dtype, block=(eb, nfp3, 3),
+                 index=lambda e: (e, 0, 0)),
+            Tile("nrm", (D.E, nfp3, 3), dtype, block=(eb, nfp3, 3),
+                 index=lambda e: (e, 0, 0)),
+            Tile("lift", (D.np_, nfp3), dtype),
+        ],
+        outputs=[Tile("out", (D.E, D.np_, 3), dtype, block=(eb, D.np_, 3),
+                      index=lambda e: (e, 0, 0))],
+        body=body,
+    )
+
+
+# low-storage 5-stage RK (Carpenter/Kennedy)
+_LSERK_A = (0.0, -567301805773 / 1357537059087, -2404267990393 / 2016746695238,
+            -3550918686646 / 2091501179385, -1275806237668 / 842570457699)
+_LSERK_B = (1432997174477 / 9575080441755, 5161836677717 / 13612068292357,
+            1720146321549 / 2090206949498, 3134564353537 / 4481467310338,
+            2277821191437 / 14882151754819)
+
+
+class SWESolver(DGVolume):
+    """Full shallow-water solver: volume + surface kernels + LSERK."""
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        m = self.mesh
+        nx = int(np.sqrt(self.E // 2))
+        self.conn = build_connectivity(nx, nx, self.n, m)
+        nfp3 = 3 * (self.n + 1)
+        self.nfp3 = nfp3
+        nrm = np.repeat(self.conn["normals"], self.n + 1, axis=1)  # (E,3nfp,2)
+        fsc = np.repeat(self.conn["fscale"], self.n + 1, axis=1)   # (E,3nfp)
+        self.o_nrm = self.device.malloc(
+            np.concatenate([nrm, fsc[..., None]], -1).astype(self.dtype))
+        self.o_lift = self.device.malloc(self.conn["lift"].astype(self.dtype))
+        self.vmapM = jnp.asarray(self.conn["vmapM"].reshape(self.E, nfp3))
+        self.vmapP = jnp.asarray(self.conn["vmapP"].reshape(self.E, nfp3))
+        self.bnd = jnp.asarray(
+            np.repeat(self.conn["boundary"], self.n + 1, axis=1))  # (E,3nfp)
+        self.nrm_j = jnp.asarray(nrm)
+        defines = dict(E=self.E, np_=self.np_, nfp3=nfp3, eb=self.eb,
+                       g=GRAV, dtype=str(self.dtype))
+        self.surf_kernel = self.device.build_kernel(dg_surface_builder, defines)
+
+    def rhs(self, Q):
+        Qf = Q.reshape(self.E * self.np_, 3)
+        QM = Qf[self.vmapM]                        # (E, 3nfp, 3)
+        QP = Qf[self.vmapP]
+        # reflective wall: mirror the normal momentum on boundary faces
+        nx_, ny_ = self.nrm_j[..., 0], self.nrm_j[..., 1]
+        qn = QM[..., 1] * nx_ + QM[..., 2] * ny_
+        wall = jnp.stack([QM[..., 0],
+                          QM[..., 1] - 2 * qn * nx_,
+                          QM[..., 2] - 2 * qn * ny_], -1)
+        QP = jnp.where(self.bnd[..., None], wall, QP)
+        (surf,) = self.surf_kernel.run(QM.astype(self.dtype),
+                                       QP.astype(self.dtype),
+                                       self.o_nrm.data, self.o_lift.data)
+        return self.rhs_volume(Q) + surf
+
+    def step(self, Q, dt):
+        res = jnp.zeros_like(Q)
+        for a, b in zip(_LSERK_A, _LSERK_B):
+            res = a * res + dt * self.rhs(Q)
+            Q = Q + b * res
+        return Q
+
+    def mass(self, Q):
+        """Total water volume (exact nodal quadrature via the mass matrix)."""
+        V = self.mesh["V"]
+        M = np.linalg.inv(V @ V.T)
+        w = jnp.asarray((M @ np.ones(self.np_)) * 1.0)
+        return jnp.einsum("en,n,e->", Q[..., 0], w, jnp.asarray(self.mesh["J"]))

@@ -1,0 +1,28 @@
+"""repro.core — the paper's contribution: a unified kernel language + host API.
+
+One kernel source expands at run time to three backends (``jnp``, ``loops``,
+``pallas``), selected per :class:`Device` — the OCCA OpenMP/OpenCL/CUDA model
+adapted to JAX/TPU. See DESIGN.md §2 for the keyword-by-keyword mapping.
+"""
+
+from .lang import BACKENDS, Ctx, Spec, Tile, TileRef, cdiv, expand
+from .device import Device, BuildStats
+from .kernel import Kernel
+from .memory import Memory
+from .tune import TuneResult, autotune
+
+__all__ = [
+    "BACKENDS",
+    "BuildStats",
+    "Ctx",
+    "Device",
+    "Kernel",
+    "Memory",
+    "Spec",
+    "Tile",
+    "TileRef",
+    "TuneResult",
+    "autotune",
+    "cdiv",
+    "expand",
+]

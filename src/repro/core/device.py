@@ -1,0 +1,100 @@
+"""occa::device analogue — run-time backend selection + kernel build cache.
+
+``Device("pallas")`` on a TPU host compiles real Pallas kernels; on this CPU
+container it transparently selects ``interpret=True`` (the kernel *language*
+is identical — that is the portability contract). ``build_kernel`` performs
+the paper's run-time compilation: the builder is invoked with the injected
+``defines`` (addDefine analogue), expanded for the device's backend, jitted,
+and cached keyed by (builder, defines, backend) — OCCA's kernel cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable
+
+import jax
+
+from . import lang
+from .kernel import Kernel
+from .memory import Memory
+
+__all__ = ["Device", "BuildStats"]
+
+
+@dataclasses.dataclass
+class BuildStats:
+    builds: int = 0
+    cache_hits: int = 0
+
+
+def _freeze(v):
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    return v
+
+
+class Device:
+    """A compute backend with its own kernel build cache."""
+
+    BACKENDS = lang.BACKENDS
+
+    def __init__(self, backend: str = "jnp", *, interpret: bool | None = None):
+        if backend not in self.BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; expected one of {self.BACKENDS}")
+        self.backend = backend
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = bool(interpret)
+        self._cache: dict = {}
+        self._lock = threading.Lock()
+        self.stats = BuildStats()
+
+    # -- memory ---------------------------------------------------------------
+    def malloc(self, array_or_shape, dtype=None) -> Memory:
+        import jax.numpy as jnp
+
+        if isinstance(array_or_shape, (tuple, list)) or isinstance(array_or_shape, int):
+            shape = (array_or_shape,) if isinstance(array_or_shape, int) else tuple(array_or_shape)
+            array = jnp.zeros(shape, dtype or jnp.float32)
+        else:
+            array = jnp.asarray(array_or_shape)
+        return Memory(self, array)
+
+    # -- run-time kernel compilation -------------------------------------------
+    def build_kernel(self, builder: Callable, defines: dict | None = None) -> Kernel:
+        defines = dict(defines or {})
+        key = (
+            getattr(builder, "__module__", "?") + "." + getattr(builder, "__qualname__", repr(builder)),
+            _freeze(defines),
+            self.backend,
+            self.interpret,
+        )
+        with self._lock:
+            hit = self._cache.get(key)
+            if hit is not None:
+                self.stats.cache_hits += 1
+                return hit
+
+        D = lang.defines_namespace(defines)
+        spec = builder(D)
+        if not isinstance(spec, lang.Spec):
+            raise TypeError(f"builder {builder!r} must return lang.Spec, got {type(spec)}")
+        fn = lang.expand(spec, D, self.backend, interpret=self.interpret)
+        kern = Kernel(self, spec, jax.jit(fn), defines)
+
+        with self._lock:
+            self._cache[key] = kern
+            self.stats.builds += 1
+        return kern
+
+    def synchronize(self) -> None:
+        # jax dispatch is async; nothing to do beyond letting callers
+        # block on results (block_until_ready on Memory.data).
+        pass
+
+    def __repr__(self):
+        return f"Device(backend={self.backend!r}, interpret={self.interpret})"

@@ -1,0 +1,55 @@
+"""occa::kernel analogue — a built (backend-expanded, jitted) kernel handle."""
+
+from __future__ import annotations
+
+import jax
+
+from .memory import Memory
+
+__all__ = ["Kernel"]
+
+
+class Kernel:
+    """Callable kernel handle.
+
+    Call convention follows the paper's host code (listing 9): positional
+    arguments are the kernel's inputs followed by its outputs. Output
+    arguments must be :class:`Memory`; their handles are rebound to the fresh
+    result arrays (functional under the hood, imperative at the surface).
+    """
+
+    def __init__(self, device, spec, compiled, defines: dict):
+        self.device = device
+        self.spec = spec
+        self.defines = dict(defines)
+        self._compiled = compiled
+        self.n_in = len(spec.inputs)
+        self.n_out = len(spec.outputs)
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    def __call__(self, *args):
+        if len(args) != self.n_in + self.n_out:
+            raise TypeError(
+                f"kernel {self.name!r} expects {self.n_in} inputs + "
+                f"{self.n_out} outputs, got {len(args)} args")
+        ins = [a.data if isinstance(a, Memory) else a for a in args[: self.n_in]]
+        outs = self._compiled(*ins)
+        for slot, val in zip(args[self.n_in:], outs):
+            if not isinstance(slot, Memory):
+                raise TypeError(f"kernel {self.name!r}: output args must be Memory")
+            slot._rebind(val)
+        return outs
+
+    # Functional entry point (used by tests / composition inside jit).
+    def run(self, *in_arrays):
+        return self._compiled(*in_arrays)
+
+    def lowered_text(self, *in_arrays) -> str:
+        return jax.jit(self._compiled).lower(*in_arrays).as_text()
+
+    def __repr__(self):
+        return (f"Kernel({self.name!r}, backend={self.device.backend}, "
+                f"defines={self.defines})")

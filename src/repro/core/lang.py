@@ -1,0 +1,356 @@
+"""The unified kernel language (paper §3, adapted for TPU).
+
+One kernel source — a ``body(ctx, *tiles)`` function over VMEM-sized tiles
+plus a :class:`Spec` describing its grid/block structure — expands to three
+backends, mirroring the paper's macro expansion to OpenMP/OpenCL/CUDA:
+
+  ``loops``   serial ``lax.fori_loop`` over the grid   (the OpenMP expansion)
+  ``jnp``     whole-grid vectorized expansion          (portable reference / oracle)
+  ``pallas``  ``pl.pallas_call`` + BlockSpec           (the TPU/"CUDA" expansion)
+
+Keyword mapping (paper appendix tables → this module):
+
+  occaOuterFor / occaOuterId   grid / ``ctx.outer_id(d)``
+  occaInnerFor / occaInnerId   vector lanes of the tile / ``ctx.lane_ids(n)``
+  occaShared (+ manual cache)  ``ctx.cache(ref)`` — tile load into VMEM
+  occaBarrier(...)             ``ctx.barrier()`` — a no-op: a TPU block executes
+                               as ONE sequenced program, which is exactly the
+                               paper's OpenMP "inner loops run serially" model
+  occaPrivate(Array)           ``ctx.private(x)`` — per-tile values (registers)
+  occaCPU/occaGPU/occaOpenMP…  ``ctx.backend`` / ``ctx.is_pallas`` etc.
+  occaKernelInfoArg            the ``ctx`` argument itself
+  addDefine / buildKernel      ``Device.build_kernel(builder, defines=...)``
+
+Restrictions (asserted): block shapes must divide the full array shape, and
+every output block is visited exactly once (no grid-carried accumulation —
+hand-written Pallas kernels in ``repro.kernels`` cover that pattern).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from types import SimpleNamespace
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "Tile",
+    "Spec",
+    "Ctx",
+    "TileRef",
+    "cdiv",
+    "defines_namespace",
+    "expand",
+    "BACKENDS",
+]
+
+BACKENDS = ("jnp", "loops", "pallas")
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def defines_namespace(defines: dict | None) -> SimpleNamespace:
+    return SimpleNamespace(**(defines or {}))
+
+
+@dataclasses.dataclass(frozen=True)
+class Tile:
+    """One kernel argument: full array shape + its per-grid-cell block.
+
+    ``block=None`` means the whole array is visible to every grid cell (the
+    "global memory" view, e.g. for stencil halos). ``index`` maps grid ids to
+    *block* indices (Pallas convention); ``None`` selects the canonical
+    identity map (requires ``len(grid) == ndim``) or the constant-zero map for
+    whole-array tiles.
+    """
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: object
+    block: tuple[int, ...] | None = None
+    index: Callable[..., tuple] | None = None
+
+    def resolved_block(self) -> tuple[int, ...]:
+        blk = tuple(self.shape) if self.block is None else tuple(self.block)
+        if len(blk) != len(self.shape):
+            raise ValueError(
+                f"tile {self.name!r}: block rank {len(blk)} != array rank {len(self.shape)}")
+        for s, b in zip(self.shape, blk):
+            if s % b != 0:
+                raise ValueError(
+                    f"tile {self.name!r}: block {blk} does not divide shape {self.shape}")
+        return blk
+
+    def resolved_index(self, grid: tuple[int, ...]) -> Callable[..., tuple]:
+        if self.index is not None:
+            return self.index
+        blk = self.resolved_block()
+        if blk == tuple(self.shape):  # whole-array tile
+            ndim = len(self.shape)
+            return lambda *gids: (0,) * ndim
+        if len(grid) != len(self.shape):
+            raise ValueError(
+                f"tile {self.name!r}: no index map and grid rank {len(grid)} != "
+                f"array rank {len(self.shape)}; pass index= explicitly")
+        return lambda *gids: gids
+
+
+@dataclasses.dataclass
+class Spec:
+    """A built kernel: grid + tiles + body. Produced by a builder(D) call."""
+
+    name: str
+    grid: tuple[int, ...]
+    inputs: list[Tile]
+    outputs: list[Tile]
+    body: Callable
+
+    def __post_init__(self):
+        self.grid = tuple(int(g) for g in self.grid)
+        if not self.grid:
+            raise ValueError("grid must be non-empty")
+        names = [t.name for t in self.inputs + self.outputs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tile names in kernel {self.name!r}")
+        # Every output block must be visited exactly once.
+        for t in self.outputs:
+            blk = t.resolved_block()
+            idx = t.resolved_index(self.grid)
+            seen = set()
+            for cell in np.ndindex(*self.grid):
+                bi = tuple(int(i) for i in idx(*cell))
+                if bi in seen:
+                    raise ValueError(
+                        f"output tile {t.name!r} block {bi} visited more than once; "
+                        "grid-carried accumulation is not supported by the language "
+                        "(write a hand-tiled kernel in repro.kernels instead)")
+                seen.add(bi)
+            nblocks = math.prod(s // b for s, b in zip(t.shape, blk))
+            if len(seen) != nblocks:
+                raise ValueError(
+                    f"output tile {t.name!r}: {len(seen)} blocks visited but "
+                    f"{nblocks} exist; kernel would leave garbage")
+
+
+class TileRef:
+    """Functional ref shim exposing the same read/write surface as a Pallas Ref."""
+
+    __slots__ = ("_value",)
+
+    def __init__(self, value):
+        self._value = value
+
+    def __getitem__(self, idx):
+        return self._value[idx]
+
+    def __setitem__(self, idx, val):
+        if idx is Ellipsis or idx == slice(None):
+            self._value = jnp.broadcast_to(val, self._value.shape).astype(self._value.dtype)
+        else:
+            self._value = self._value.at[idx].set(val)
+
+    @property
+    def value(self):
+        return self._value
+
+    @property
+    def shape(self):
+        return self._value.shape
+
+    @property
+    def dtype(self):
+        return self._value.dtype
+
+
+class Ctx:
+    """occaKernelInfoArg analogue: grid ids/dims, defines, backend flags."""
+
+    def __init__(self, backend: str, defines: SimpleNamespace,
+                 gids: Sequence, grid: tuple[int, ...]):
+        self.backend = backend
+        self.D = defines
+        self._gids = tuple(gids)
+        self.grid = grid
+
+    # --- occaOuterId / occaOuterDim ---------------------------------------
+    def outer_id(self, d: int):
+        return self._gids[d]
+
+    def outer_dim(self, d: int) -> int:
+        return self.grid[d]
+
+    # --- occaInnerId: lanes of the vectorized tile ------------------------
+    def lane_ids(self, n: int):
+        return jnp.arange(n)
+
+    # --- occaBarrier: no-op (sequential block execution; see module doc) --
+    def barrier(self, *_fence):
+        return None
+
+    # --- occaShared manual caching: load a tile into VMEM ------------------
+    def cache(self, ref):
+        return ref[...]
+
+    # --- occaPrivate ------------------------------------------------------
+    def private(self, value):
+        return value
+
+    # --- occaCPU / occaGPU / occaOpenMP / occaOpenCL / occaCUDA ------------
+    @property
+    def is_pallas(self) -> bool:
+        return self.backend == "pallas"
+
+    @property
+    def is_jnp(self) -> bool:
+        return self.backend == "jnp"
+
+    @property
+    def is_loops(self) -> bool:
+        return self.backend == "loops"
+
+
+# ---------------------------------------------------------------------------
+# Backend expansions
+# ---------------------------------------------------------------------------
+
+def _slice_tile(tile: Tile, arr, gids, grid):
+    blk = tile.resolved_block()
+    if blk == tuple(tile.shape):
+        return TileRef(arr)  # whole-array view: no copy, no vmap blow-up
+    bidx = tile.resolved_index(grid)(*gids)
+    starts = [i * b for i, b in zip(bidx, blk)]
+    return TileRef(lax.dynamic_slice(arr, starts, blk))
+
+
+def _static_starts(tile: Tile, grid) -> np.ndarray:
+    """Evaluate the index map for every grid cell at trace time."""
+    blk = tile.resolved_block()
+    idx = tile.resolved_index(grid)
+    starts = [
+        [int(i) * b for i, b in zip(idx(*cell), blk)]
+        for cell in np.ndindex(*grid)
+    ]
+    return np.asarray(starts, dtype=np.int32)
+
+
+def _is_canonical(tile: Tile, grid) -> bool:
+    """True if the index map is the identity over the grid (fast reshape path)."""
+    blk = tile.resolved_block()
+    if len(grid) != len(tile.shape):
+        return False
+    if any(g * b != s for g, b, s in zip(grid, blk, tile.shape)):
+        return False
+    for cell in np.ndindex(*grid):
+        if tuple(int(i) for i in tile.resolved_index(grid)(*cell)) != cell:
+            return False
+    return True
+
+
+def _expand_jnp(spec: Spec, defines: SimpleNamespace):
+    grid = spec.grid
+    ncells = math.prod(grid)
+
+    def fn(*in_arrays):
+        def cell(flat_idx):
+            gids = jnp.unravel_index(flat_idx, grid)
+            ins = [_slice_tile(t, a, gids, grid) for t, a in zip(spec.inputs, in_arrays)]
+            outs = [TileRef(jnp.zeros(t.resolved_block(), t.dtype)) for t in spec.outputs]
+            ctx = Ctx("jnp", defines, gids, grid)
+            spec.body(ctx, *ins, *outs)
+            return tuple(o.value for o in outs)
+
+        blocks = jax.vmap(cell)(jnp.arange(ncells))  # tuple of (ncells, *blk)
+        results = []
+        for t, stack in zip(spec.outputs, blocks):
+            blk = t.resolved_block()
+            if _is_canonical(t, grid):
+                # (g0..gk, b0..bk) -> interleave -> full shape
+                x = stack.reshape(grid + blk)
+                perm = []
+                for d in range(len(grid)):
+                    perm += [d, len(grid) + d]
+                x = x.transpose(perm)
+                results.append(x.reshape(t.shape))
+            else:
+                starts = jnp.asarray(_static_starts(t, grid))
+                out0 = jnp.zeros(t.shape, t.dtype)
+
+                def write(j, acc, stack=stack, starts=starts):
+                    st = [starts[j, k] for k in range(starts.shape[1])]
+                    return lax.dynamic_update_slice(acc, stack[j], st)
+
+                results.append(lax.fori_loop(0, ncells, write, out0))
+        return tuple(results)
+
+    return fn
+
+
+def _expand_loops(spec: Spec, defines: SimpleNamespace):
+    grid = spec.grid
+    ncells = math.prod(grid)
+
+    def fn(*in_arrays):
+        outs0 = tuple(jnp.zeros(t.shape, t.dtype) for t in spec.outputs)
+
+        def step(flat_idx, accs):
+            gids = jnp.unravel_index(flat_idx, grid)
+            ins = [_slice_tile(t, a, gids, grid) for t, a in zip(spec.inputs, in_arrays)]
+            outs = [TileRef(jnp.zeros(t.resolved_block(), t.dtype)) for t in spec.outputs]
+            ctx = Ctx("loops", defines, gids, grid)
+            spec.body(ctx, *ins, *outs)
+            new = []
+            for t, o, acc in zip(spec.outputs, outs, accs):
+                blk = t.resolved_block()
+                bidx = t.resolved_index(grid)(*gids)
+                starts = [i * b for i, b in zip(bidx, blk)]
+                new.append(lax.dynamic_update_slice(acc, o.value, starts))
+            return tuple(new)
+
+        return lax.fori_loop(0, ncells, step, outs0)
+
+    return fn
+
+
+def _expand_pallas(spec: Spec, defines: SimpleNamespace, interpret: bool):
+    grid = spec.grid
+
+    def body_adapter(*refs):
+        gids = tuple(pl.program_id(d) for d in range(len(grid)))
+        ctx = Ctx("pallas", defines, gids, grid)
+        spec.body(ctx, *refs)
+
+    def mk_block(t: Tile):
+        return pl.BlockSpec(t.resolved_block(), t.resolved_index(grid))
+
+    call = pl.pallas_call(
+        body_adapter,
+        grid=grid,
+        in_specs=[mk_block(t) for t in spec.inputs],
+        out_specs=[mk_block(t) for t in spec.outputs],
+        out_shape=[jax.ShapeDtypeStruct(t.shape, t.dtype) for t in spec.outputs],
+        interpret=interpret,
+    )
+
+    def fn(*in_arrays):
+        return tuple(call(*in_arrays))
+
+    return fn
+
+
+def expand(spec: Spec, defines: SimpleNamespace, backend: str, *, interpret: bool = True):
+    """Expand one kernel Spec for a backend (the run-time 'macro expansion')."""
+    if backend == "jnp":
+        return _expand_jnp(spec, defines)
+    if backend == "loops":
+        return _expand_loops(spec, defines)
+    if backend == "pallas":
+        return _expand_pallas(spec, defines, interpret)
+    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")

@@ -1,0 +1,63 @@
+"""occa::memory analogue — device memory handles over functional JAX.
+
+OCCA memory is imperative (kernels write into it; ``o_u1.swap(o_u2)`` swaps
+handles). JAX arrays are immutable, so a :class:`Memory` owns a *rebindable*
+reference to a ``jax.Array``: kernels return fresh arrays and the host API
+rebinds the handle — the user-visible semantics (including ``swap``, the
+paper's code listing 9) are preserved exactly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Memory"]
+
+
+class Memory:
+    __slots__ = ("device", "_arr")
+
+    def __init__(self, device, array):
+        self.device = device
+        self._arr = jnp.asarray(array)
+
+    # -- handle access ------------------------------------------------------
+    @property
+    def data(self) -> jax.Array:
+        return self._arr
+
+    @property
+    def shape(self):
+        return self._arr.shape
+
+    @property
+    def dtype(self):
+        return self._arr.dtype
+
+    @property
+    def nbytes(self) -> int:
+        return self._arr.size * self._arr.dtype.itemsize
+
+    # -- paper listing 9: o_u1.swap(o_u2) ------------------------------------
+    def swap(self, other: "Memory") -> None:
+        self._arr, other._arr = other._arr, self._arr
+
+    # -- host<->device copies -------------------------------------------------
+    def to_host(self) -> np.ndarray:
+        return np.asarray(self._arr)
+
+    def from_host(self, array) -> None:
+        array = jnp.asarray(array)
+        if array.shape != self._arr.shape or array.dtype != self._arr.dtype:
+            raise ValueError(
+                f"from_host: expected {self._arr.shape}/{self._arr.dtype}, "
+                f"got {array.shape}/{array.dtype}")
+        self._arr = array
+
+    def _rebind(self, array) -> None:
+        self._arr = array
+
+    def __repr__(self):
+        return f"Memory(shape={self.shape}, dtype={self.dtype}, backend={self.device.backend})"

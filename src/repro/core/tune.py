@@ -1,0 +1,76 @@
+"""Kernel autotuning — the paper's `setThreadArray` tuning loop as a
+first-class facility: sweep block-size defines for a kernel builder on a
+device, time each candidate, cache the winner.
+
+    best = autotune(device, fd2d_builder, base_defines,
+                    sweep={"bh": [16, 32, 64, 128]},
+                    args=(u1, u2))
+    kernel = device.build_kernel(fd2d_builder, best)
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+
+import jax
+
+__all__ = ["autotune", "TuneResult"]
+
+
+class TuneResult(dict):
+    """The winning defines; ``.trials`` holds (defines, seconds) for all
+    candidates, ``.best_seconds`` the winning time."""
+
+    def __init__(self, best_defines, trials):
+        super().__init__(best_defines)
+        self.trials = trials
+        self.best_seconds = min(t for _, t in trials)
+
+
+def _time_once(kernel, args, *, warmup=1, repeats=3):
+    for _ in range(warmup):
+        out = kernel.run(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = kernel.run(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune(device, builder, defines: dict, *, sweep: dict, args,
+             warmup: int = 1, repeats: int = 3, validate: bool = True):
+    """Grid-search ``sweep`` (name -> candidate values) over ``defines``.
+
+    Invalid candidates (non-dividing blocks etc.) are skipped via the
+    Spec validation errors. With ``validate=True`` every candidate's output
+    is checked against the first valid candidate (tuning must not change
+    results — the paper's correctness-portability contract).
+    """
+    import numpy as np
+
+    names = sorted(sweep)
+    trials = []
+    reference = None
+    for combo in itertools.product(*(sweep[n] for n in names)):
+        cand = dict(defines, **dict(zip(names, combo)))
+        try:
+            kernel = device.build_kernel(builder, cand)
+        except (ValueError, AssertionError):
+            continue  # invalid tiling for this shape
+        sec = _time_once(kernel, args, warmup=warmup, repeats=repeats)
+        if validate:
+            out = [np.asarray(o) for o in kernel.run(*args)]
+            if reference is None:
+                reference = out
+            else:
+                for a, b in zip(out, reference):
+                    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+        trials.append((cand, sec))
+    if not trials:
+        raise ValueError("no valid candidate in the sweep")
+    best = min(trials, key=lambda t: t[1])[0]
+    return TuneResult(best, trials)

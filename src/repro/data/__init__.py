@@ -1,0 +1,1 @@
+from .pipeline import Prefetcher, SyntheticLMData, TextLMData, make_corpus  # noqa: F401

@@ -1,0 +1,8 @@
+"""Hand-tiled Pallas TPU kernels for the LM hot-spots.
+
+Each kernel ships with ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jitted wrapper + custom VJP) and ``ref.py`` (pure-jnp oracle),
+validated against the oracle in interpret mode across shape/dtype sweeps.
+"""
+
+from . import flash_attention, rmsnorm, ssm_scan  # noqa: F401

@@ -1,0 +1,5 @@
+from .ops import decode_attention, flash_attention
+from .ref import decode_ref, mha_chunked, mha_ref
+
+__all__ = ["flash_attention", "decode_attention", "mha_ref", "mha_chunked",
+           "decode_ref"]

@@ -1,0 +1,395 @@
+"""Blocked online-softmax attention (FlashAttention) as a Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §2): work-groups -> grid cells holding one
+(block_q x head_dim) query tile in VMEM; the kv dimension is the innermost
+grid axis so the softmax running state (m, l, acc) lives in VMEM scratch and
+persists across sequential grid steps — the TPU realization of the CUDA
+flash-attention inner loop. Causal/sliding-window blocks that are fully
+masked are skipped with ``pl.when`` (no MXU work issued).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd", "flash_attention_bwd", "flash_decode"]
+
+_NEG_INF = float("-inf")
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
+                sm_scale, causal, window, prefix_len, block_q, block_kv,
+                q_offset, nk):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset
+    k_pos = ki * block_kv + jax.lax.iota(jnp.int32, block_kv)
+
+    # whole-block skip: strictly-above-diagonal (causal) or out-of-window
+    run = jnp.bool_(True)
+    if causal:
+        run &= (ki * block_kv) <= (qi * block_q + q_offset + block_q - 1)
+    if window is not None:
+        run &= (qi * block_q + q_offset) - (ki * block_kv + block_kv - 1) < window
+    if prefix_len:
+        run |= (ki * block_kv) < prefix_len   # prefix keys always visible
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (block_q, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (block_kv, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        mask = jnp.ones((block_q, block_kv), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        if prefix_len:
+            mask |= jnp.broadcast_to(k_pos[None, :] < prefix_len, mask.shape)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[:, :1]                         # (block_q, 1)
+        l_prev = l_scr[:, :1]
+        m_cur = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        # correction for fully-masked history (m_prev == -inf): acc is 0 there
+        corr = jnp.where(m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_cur))
+        p = jnp.exp(s - m_cur)
+        p = jnp.where(mask, p, 0.0)                   # kills -inf - -inf NaNs
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        l_scr[:, :1] = l_prev * corr + p.sum(-1, keepdims=True)
+        m_scr[:, :1] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = l_scr[:, :1]
+        o_ref[0, 0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+        # log-sum-exp per query row (softmax stats for the backward kernel)
+        lse_ref[0, 0] = (m_scr[:, 0] + jnp.log(jnp.where(l[:, 0] == 0.0, 1.0,
+                                                         l[:, 0])))
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=None, sm_scale=None,
+                        prefix_len=0, block_q=128, block_kv=128, interpret=True):
+    """q: (B, H, Sq, Dqk); k: (B, Hk, Skv, Dqk); v: (B, Hk, Skv, Dv).
+
+    Returns ((B, H, Sq, Dv), lse (B, H, Sq) f32). Dv may differ from Dqk."""
+    b, h, sq, d = q.shape
+    _, hk, skv, _ = k.shape
+    dv = v.shape[-1]
+    assert h % hk == 0, (h, hk)
+    g = h // hk
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0, (sq, block_q, skv, block_kv)
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    nq, nk = sq // block_q, skv // block_kv
+    q_offset = skv - sq  # queries aligned to the end of the kv stream
+
+    kernel = functools.partial(
+        _fwd_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        prefix_len=prefix_len, block_q=block_q, block_kv=block_kv,
+        q_offset=q_offset, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, dv), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, dv), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b_, h_, qi, ki: (b_, h_, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, sq, dv), q.dtype),
+            jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),   # m (lane-replicated col 0)
+            pltpu.VMEM((block_q, 128), jnp.float32),   # l
+            pltpu.VMEM((block_q, dv), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                   sm_scale, window, block_kv, kv_len, nk):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_pos = ki * block_kv + jax.lax.iota(jnp.int32, block_kv)
+    q_pos = kv_len - 1
+
+    run = jnp.bool_(True)
+    if window is not None:
+        run &= (q_pos - (ki * block_kv + block_kv - 1)) < window
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)            # (1, d) -> use as (d,)
+        k = k_ref[0, 0].astype(jnp.float32)            # (block_kv, d)
+        s = (k @ q[0]) * sm_scale                      # (block_kv,)
+        mask = k_pos <= q_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_prev = m_scr[0, 0]
+        m_cur = jnp.maximum(m_prev, s.max())
+        corr = jnp.where(m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_cur))
+        p = jnp.exp(s - m_cur)
+        p = jnp.where(mask, p, 0.0)
+        v = v_ref[0, 0].astype(jnp.float32)            # (block_kv, d)
+        acc_scr[...] = acc_scr[...] * corr + (p[None, :] @ v)
+        l_scr[0, 0] = l_scr[0, 0] * corr + p.sum()
+        m_scr[0, 0] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = l_scr[0, 0]
+        o_ref[0, 0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, *, window=None, sm_scale=None, block_kv=512,
+                 interpret=True):
+    """Single-token decode: q (B, H, 1, D) vs cache k/v (B, Hk, S, D)."""
+    b, h, one, d = q.shape
+    assert one == 1
+    _, hk, skv, _ = k.shape
+    g = h // hk
+    block_kv = min(block_kv, skv)
+    assert skv % block_kv == 0
+    nk = skv // block_kv
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_decode_kernel, sm_scale=sm_scale, window=window,
+                               block_kv=block_kv, kv_len=skv, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ki: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, ki: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, ki: (b_, h_ // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ki: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 128), jnp.float32),
+            pltpu.VMEM((1, 128), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# backward kernels (flash bwd: dq / dk / dv with recomputed p from lse)
+# ---------------------------------------------------------------------------
+
+def _mask_block(q_pos, k_pos, *, causal, window, prefix_len):
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    if prefix_len:
+        mask |= jnp.broadcast_to(k_pos[None, :] < prefix_len, mask.shape)
+    return mask
+
+
+def _p_block(q, k, lse, mask, sm_scale):
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    p = jnp.exp(s - lse[:, None])
+    return jnp.where(mask, p, 0.0)
+
+
+def _run_cond(qi, ki, *, causal, window, prefix_len, block_q, block_kv,
+              q_offset):
+    run = jnp.bool_(True)
+    if causal:
+        run &= (ki * block_kv) <= (qi * block_q + q_offset + block_q - 1)
+    if window is not None:
+        run &= (qi * block_q + q_offset) - (ki * block_kv + block_kv - 1) < window
+    if prefix_len:
+        run |= (ki * block_kv) < prefix_len
+    return run
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_scr, dv_scr, *, sm_scale, causal,
+                    window, prefix_len, block_q, block_kv, q_offset, nq):
+    ki = pl.program_id(2)
+    qi = pl.program_id(3)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    run = _run_cond(qi, ki, causal=causal, window=window,
+                    prefix_len=prefix_len, block_q=block_q,
+                    block_kv=block_kv, q_offset=q_offset)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset
+        k_pos = ki * block_kv + jax.lax.iota(jnp.int32, block_kv)
+        mask = _mask_block(q_pos, k_pos, causal=causal, window=window,
+                           prefix_len=prefix_len)
+        p = _p_block(q, k, lse, mask, sm_scale)              # (bq, bkv)
+        dv_scr[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # p^T @ do
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * sm_scale            # (bq, bkv)
+        dk_scr[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # ds^T @ q
+
+    @pl.when(qi == nq - 1)
+    def _fin():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dq_ref, dq_scr, *, sm_scale, causal, window, prefix_len,
+                   block_q, block_kv, q_offset, nk):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    run = _run_cond(qi, ki, causal=causal, window=window,
+                    prefix_len=prefix_len, block_q=block_q,
+                    block_kv=block_kv, q_offset=q_offset)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0]
+        delta = delta_ref[0, 0]
+        q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset
+        k_pos = ki * block_kv + jax.lax.iota(jnp.int32, block_kv)
+        mask = _mask_block(q_pos, k_pos, causal=causal, window=window,
+                           prefix_len=prefix_len)
+        p = _p_block(q, k, lse, mask, sm_scale)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * sm_scale
+        dq_scr[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # ds @ k
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, o, do, lse, *, causal=True, window=None,
+                        sm_scale=None, prefix_len=0, block_q=128,
+                        block_kv=128, interpret=True):
+    """Flash backward. Returns (dq, dk, dv) with GQA group reduction."""
+    b, h, sq, d = q.shape
+    _, hk, skv, _ = k.shape
+    dv_dim = v.shape[-1]
+    g = h // hk
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    nq, nk = sq // block_q, skv // block_kv
+    q_offset = skv - sq
+    kw = dict(sm_scale=sm_scale, causal=causal, window=window,
+              prefix_len=prefix_len, block_q=block_q, block_kv=block_kv,
+              q_offset=q_offset)
+
+    # delta_i = sum_d do_i * o_i (rowwise) — tiny elementwise precompute
+    delta = (do.astype(jnp.float32) * o.astype(jnp.float32)).sum(-1)
+
+    q_spec = pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, ki, qi: (b_, h_, qi, 0))
+    do_spec = pl.BlockSpec((1, 1, block_q, dv_dim), lambda b_, h_, ki, qi: (b_, h_, qi, 0))
+    stat_spec = pl.BlockSpec((1, 1, block_q), lambda b_, h_, ki, qi: (b_, h_, qi))
+    k_spec = pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, ki, qi: (b_, h_ // g, ki, 0))
+    v_spec = pl.BlockSpec((1, 1, block_kv, dv_dim), lambda b_, h_, ki, qi: (b_, h_ // g, ki, 0))
+
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, nq=nq, **kw),
+        grid=(b, h, nk, nq),
+        in_specs=[q_spec, k_spec, v_spec, do_spec, stat_spec, stat_spec],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, ki, qi: (b_, h_, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, dv_dim), lambda b_, h_, ki, qi: (b_, h_, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, skv, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, skv, dv_dim), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_kv, d), jnp.float32),
+            pltpu.VMEM((block_kv, dv_dim), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    q_spec2 = pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0))
+    do_spec2 = pl.BlockSpec((1, 1, block_q, dv_dim), lambda b_, h_, qi, ki: (b_, h_, qi, 0))
+    stat_spec2 = pl.BlockSpec((1, 1, block_q), lambda b_, h_, qi, ki: (b_, h_, qi))
+    k_spec2 = pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0))
+    v_spec2 = pl.BlockSpec((1, 1, block_kv, dv_dim), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, nk=nk, **kw),
+        grid=(b, h, nq, nk),
+        in_specs=[q_spec2, k_spec2, v_spec2, do_spec2, stat_spec2, stat_spec2],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # GQA: reduce dk/dv over the query-head group
+    dk = dk_h.reshape(b, hk, g, skv, d).sum(2).astype(k.dtype)
+    dv = dv_h.reshape(b, hk, g, skv, dv_dim).sum(2).astype(v.dtype)
+    return dq, dk, dv

@@ -1,0 +1,57 @@
+"""Jitted public wrappers for flash attention with a custom VJP.
+
+Forward and backward both run Pallas kernels (interpret-mode on CPU,
+compiled on TPU). No O(S^2) residuals are saved — only (q, k, v, o, lse);
+the backward kernels recompute p blockwise from the lse stats.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_bwd, flash_attention_fwd, flash_decode
+from .ref import decode_ref, mha_ref
+
+__all__ = ["flash_attention", "decode_attention"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, sm_scale, prefix_len, block_q, block_kv):
+    o, _ = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               sm_scale=sm_scale, prefix_len=prefix_len,
+                               block_q=block_q, block_kv=block_kv)
+    return o
+
+
+def _flash_fwd(q, k, v, causal, window, sm_scale, prefix_len, block_q, block_kv):
+    o, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                 sm_scale=sm_scale, prefix_len=prefix_len,
+                                 block_q=block_q, block_kv=block_kv)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, window, sm_scale, prefix_len, block_q, block_kv, res, g):
+    q, k, v, o, lse = res
+    return flash_attention_bwd(q, k, v, o, g, lse, causal=causal,
+                               window=window, sm_scale=sm_scale,
+                               prefix_len=prefix_len, block_q=block_q,
+                               block_kv=block_kv)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, sm_scale=None,
+                    prefix_len=0, block_q=128, block_kv=128):
+    """Differentiable flash attention. q (B,H,Sq,Dqk), k (B,Hk,Skv,Dqk),
+    v (B,Hk,Skv,Dv)."""
+    return _flash(q, k, v, causal, window, sm_scale, prefix_len, block_q,
+                  block_kv)
+
+
+def decode_attention(q, k, v, *, window=None, sm_scale=None, block_kv=512):
+    """Single-token decode attention (no grad needed at serving time)."""
+    return flash_decode(q, k, v, window=window, sm_scale=sm_scale,
+                        block_kv=block_kv)

@@ -1,0 +1,110 @@
+"""Pure-jnp oracle for (GQA / causal / sliding-window) attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["mha_ref", "decode_ref"]
+
+
+def _expand_kv(k, n_q_heads):
+    """(B, Hk, S, D) -> (B, H, S, D) by group broadcast."""
+    b, hk, s, d = k.shape
+    g = n_q_heads // hk
+    return jnp.repeat(k, g, axis=1)
+
+
+def _mask(sq, skv, *, causal, window, prefix_len):
+    q_pos = jnp.arange(sq) + (skv - sq)
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    if prefix_len:
+        # prefix-LM (paligemma): keys inside the prefix are always visible
+        mask |= jnp.broadcast_to(k_pos[None, :] < prefix_len, mask.shape)
+    return mask
+
+
+def mha_ref(q, k, v, *, causal=True, window=None, sm_scale=None, prefix_len=0):
+    """q: (B, H, Sq, Dqk); k: (B, Hk, Skv, Dqk); v: (B, Hk, Skv, Dv).
+
+    ``window`` (int) masks keys with q_pos - k_pos >= window (sliding window,
+    mixtral-style; the diagonal is always kept). ``prefix_len`` makes the
+    first ``prefix_len`` keys visible to every query (prefix-LM). Query
+    positions are aligned to the END of the kv sequence (prefill: Sq == Skv;
+    decode: Sq < Skv).
+    """
+    b, h, sq, d = q.shape
+    _, hk, skv, _ = k.shape
+    dv = v.shape[-1]
+    g = h // hk
+    if sm_scale is None:
+        sm_scale = 1.0 / d ** 0.5
+    # grouped einsums: no repeated-kv materialization, no f32 kv copies
+    # (f32 MXU accumulation via preferred_element_type)
+    qg = q.reshape(b, hk, g, sq, d)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * sm_scale
+    mask = _mask(sq, skv, causal=causal, window=window, prefix_len=prefix_len)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    denom = p.sum(-1, keepdims=True)
+    p = p / jnp.where(denom == 0, 1.0, denom)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, sq, dv).astype(q.dtype)
+
+
+def mha_chunked(q, k, v, *, causal=True, window=None, sm_scale=None,
+                prefix_len=0, block_q=1024):
+    """Memory-sane jnp attention: lax.scan over query blocks (online softmax
+    not needed — full key dim per block, O(B*H*block_q*Skv) working set).
+    Used by the models for long prefills (the XLA path of the flash design).
+    """
+    import jax
+
+    b, h, sq, dqk = q.shape
+    _, hk, skv, dv = v.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / dqk ** 0.5
+    block_q = min(block_q, sq)
+    while sq % block_q:
+        block_q -= 1
+    nq = sq // block_q
+    g = h // hk
+    q4 = q.reshape(b, hk, g, sq, dqk)
+    k_pos = jnp.arange(skv)
+    q_off = skv - sq
+
+    def one_block(qi):
+        qb = jax.lax.dynamic_slice_in_dim(q4, qi * block_q, block_q, axis=3)
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qb, k,
+                       preferred_element_type=jnp.float32) * sm_scale
+        q_pos = qi * block_q + jnp.arange(block_q) + q_off
+        mask = jnp.ones((block_q, skv), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        if prefix_len:
+            mask |= k_pos[None, :] < prefix_len
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jnp.exp(s - s.max(-1, keepdims=True))
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        denom = p.sum(-1, keepdims=True)
+        p = p / jnp.where(denom == 0, 1.0, denom)
+        return jnp.einsum("bkgqs,bksd->bkgqd", p.astype(v.dtype), v,
+                          preferred_element_type=jnp.float32)
+
+    blocks = jax.lax.map(one_block, jnp.arange(nq))       # (nq,b,hk,g,block_q,dv)
+    out = jnp.moveaxis(blocks, 0, 3).reshape(b, hk, g, sq, dv)
+    return out.reshape(b, h, sq, dv).astype(q.dtype)
+
+
+def decode_ref(q, k, v, *, window=None, sm_scale=None):
+    """Single-token decode: q (B, H, 1, D) against the full cache (B, Hk, S, D)."""
+    return mha_ref(q, k, v, causal=True, window=window, sm_scale=sm_scale)

@@ -1,0 +1,42 @@
+"""Fused RMSNorm Pallas kernel (row blocks resident in VMEM)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rmsnorm_pallas"]
+
+
+def _rms_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    var = (x * x).mean(axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w_ref[...]).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x, w, *, eps=1e-6, block_rows=256, interpret=True):
+    """x: (..., D); w: (D,). Normalizes the last axis."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    block_rows = min(block_rows, rows)
+    while rows % block_rows:
+        block_rows -= 1
+    out = pl.pallas_call(
+        functools.partial(_rms_kernel, eps=eps),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    return out.reshape(orig_shape)

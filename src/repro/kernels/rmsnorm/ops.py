@@ -1,0 +1,34 @@
+"""Public RMSNorm op: pallas forward, oracle VJP."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import rmsnorm_pallas
+from .ref import rmsnorm_ref
+
+__all__ = ["rmsnorm"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rms(x, w, eps):
+    return rmsnorm_pallas(x, w, eps=eps)
+
+
+def _rms_fwd(x, w, eps):
+    return _rms(x, w, eps), (x, w)
+
+
+def _rms_bwd(eps, res, g):
+    x, w = res
+    _, vjp = jax.vjp(lambda x_, w_: rmsnorm_ref(x_, w_, eps=eps), x, w)
+    return vjp(g)
+
+
+_rms.defvjp(_rms_fwd, _rms_bwd)
+
+
+def rmsnorm(x, w, *, eps=1e-6):
+    return _rms(x, w, eps)

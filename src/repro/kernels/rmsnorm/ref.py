@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for RMSNorm."""
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm_ref"]
+
+
+def rmsnorm_ref(x, w, *, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)

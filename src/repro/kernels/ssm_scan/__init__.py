@@ -1,0 +1,4 @@
+from .ops import ssm_scan
+from .ref import selective_scan_assoc, selective_scan_ref
+
+__all__ = ["ssm_scan", "selective_scan_ref", "selective_scan_assoc"]

@@ -1,0 +1,34 @@
+"""Public selective-scan op: pallas forward, associative-scan VJP."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import ssm_scan_pallas
+from .ref import selective_scan_assoc, selective_scan_ref
+
+__all__ = ["ssm_scan"]
+
+
+@jax.custom_vjp
+def _scan(x, delta, A, B, C, D):
+    y, _ = ssm_scan_pallas(x, delta, A, B, C, D)
+    return y
+
+
+def _scan_fwd(x, delta, A, B, C, D):
+    return _scan(x, delta, A, B, C, D), (x, delta, A, B, C, D)
+
+
+def _scan_bwd(res, g):
+    x, delta, A, B, C, D = res
+    _, vjp = jax.vjp(lambda *a: selective_scan_assoc(*a)[0], x, delta, A, B, C, D)
+    return vjp(g)
+
+
+_scan.defvjp(_scan_fwd, _scan_bwd)
+
+
+def ssm_scan(x, delta, A, B, C, D):
+    """Differentiable fused selective scan; see ref.selective_scan_ref."""
+    return _scan(x, delta, A, B, C, D)

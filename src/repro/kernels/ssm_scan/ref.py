@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the selective state-space scan (mamba1 core)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["selective_scan_ref", "selective_scan_assoc"]
+
+
+def selective_scan_ref(x, delta, A, B, C, D, *, h0=None):
+    """Sequential-scan oracle.
+
+    x, delta: (Bt, L, Dm); A: (Dm, N); B, C: (Bt, L, N); D: (Dm,)
+    h_t = exp(delta_t * A) * h_{t-1} + delta_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+    Returns y (Bt, L, Dm) and final state h (Bt, Dm, N).
+    """
+    bt, L, dm = x.shape
+    n = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bt, dm, n), jnp.float32)
+
+    dA = jnp.exp(delta[..., None].astype(jnp.float32) * A)          # (Bt,L,Dm,N)
+    dBx = (delta[..., None] * B[:, :, None, :] * x[..., None]).astype(jnp.float32)
+
+    def step(h, inputs):
+        dA_t, dBx_t = inputs
+        h = dA_t * h + dBx_t
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0, (dA.transpose(1, 0, 2, 3),
+                                     dBx.transpose(1, 0, 2, 3)))
+    hs = hs.transpose(1, 0, 2, 3)                                    # (Bt,L,Dm,N)
+    y = jnp.einsum("bldn,bln->bld", hs, C.astype(jnp.float32)) + D * x
+    return y.astype(x.dtype), hT
+
+
+def selective_scan_assoc(x, delta, A, B, C, D, *, h0=None):
+    """Parallel associative-scan form (what the jnp model path uses).
+
+    Same math via the linear-recurrence combine ((a1,b1)*(a2,b2) = (a1a2, a2b1+b2)).
+    """
+    bt, L, dm = x.shape
+    n = A.shape[1]
+    dA = jnp.exp(delta[..., None].astype(jnp.float32) * A)
+    dBx = (delta[..., None] * B[:, :, None, :] * x[..., None]).astype(jnp.float32)
+    if h0 is not None:
+        # fold h0 into the first step: h1 = dA_1 h0 + dBx_1
+        dBx = dBx.at[:, 0].add(dA[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    y = jnp.einsum("bldn,bln->bld", hs, C.astype(jnp.float32)) + D * x
+    return y.astype(x.dtype), hs[:, -1]

@@ -1,0 +1,3 @@
+"""Layer library: attention (GQA/MQA/SWA/MLA), SwiGLU, MoE, mamba1/2, norms."""
+
+from . import attention, blocks, common, mamba, mlp, moe, rope  # noqa: F401

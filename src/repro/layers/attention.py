@@ -1,0 +1,291 @@
+"""Attention layers: GQA (covers MHA/MQA/SWA/prefix-LM) and MLA (deepseek).
+
+Each variant provides init / forward (train+prefill) / cache init / decode.
+The perf-critical realization is selected at run time via
+``use_kernel_backend``: "pallas" -> repro.kernels flash kernels, "jnp" ->
+oracle paths (mha_ref for short, mha_chunked for long sequences). Decode uses
+masked grouped einsums over a preallocated cache updated in place.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention, mha_chunked, mha_ref
+from repro.parallel.context import shard_activation
+
+from .common import dense_init, kernel_backend, rmsnorm
+from .rope import apply_rope
+
+__all__ = [
+    "gqa_init", "gqa_forward", "gqa_cache_init", "gqa_prefill_cache",
+    "gqa_decode",
+    "mla_init", "mla_forward", "mla_cache_init", "mla_prefill_cache",
+    "mla_decode",
+]
+
+_CHUNKED_THRESHOLD = 8192  # jnp path switches to q-block-chunked beyond this
+
+
+# ===========================================================================
+# GQA (MHA when Hk == H, MQA when Hk == 1, SWA via cfg.window)
+# ===========================================================================
+
+def gqa_init(rng, cfg, dtype):
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    k0, k1, k2, k3 = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(k0, (d, h * hd), dtype),
+        "wk": dense_init(k1, (d, hk * hd), dtype),
+        "wv": dense_init(k2, (d, hk * hd), dtype),
+        "wo": dense_init(k3, (h * hd, d), dtype),
+    }
+
+
+def _qkv(params, x, cfg):
+    b, s, d = x.shape
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ params["wk"]).reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
+    v = (x @ params["wv"]).reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def gqa_forward(params, x, cfg, *, positions=None, prefix_len=0,
+                return_kv=False):
+    """Full-sequence (train / prefill) attention. x: (B, S, d_model)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, x, cfg)
+    if positions is None:
+        positions = jnp.arange(s)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_activation(q, "act_bhsd")
+    k = shard_activation(k, "act_bhsd")
+
+    if kernel_backend() == "pallas":
+        o = flash_attention(q, k, v, causal=True, window=cfg.window,
+                            prefix_len=prefix_len)
+    elif s > _CHUNKED_THRESHOLD:
+        o = mha_chunked(q, k, v, causal=True, window=cfg.window,
+                        prefix_len=prefix_len)
+    else:
+        o = mha_ref(q, k, v, causal=True, window=cfg.window,
+                    prefix_len=prefix_len)
+    y = o.transpose(0, 2, 1, 3).reshape(b, s, -1) @ params["wo"]
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def gqa_cache_init(cfg, batch, max_len, dtype):
+    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    m = min(max_len, cfg.window) if cfg.window else max_len
+    cache = {
+        "k": jnp.zeros((batch, hk, m, hd), dtype),
+        "v": jnp.zeros((batch, hk, m, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.window:
+        cache["slot_pos"] = jnp.full((m,), -1, jnp.int32)
+    return cache
+
+
+def gqa_prefill_cache(cache, k, v, cfg):
+    """Fill cache from prefill k/v (B, Hk, S, hd); returns updated cache."""
+    s = k.shape[2]
+    m = cache["k"].shape[2]
+    if cfg.window and s > m:
+        # rolling window keeps the last W tokens; slot = pos % W
+        last_pos = jnp.arange(s - m, s)
+        slots = last_pos % m
+        kk = k[:, :, -m:]
+        vv = v[:, :, -m:]
+        cache = dict(cache)
+        cache["k"] = cache["k"].at[:, :, slots].set(kk)
+        cache["v"] = cache["v"].at[:, :, slots].set(vv)
+        cache["slot_pos"] = cache["slot_pos"].at[slots].set(last_pos)
+        cache["pos"] = jnp.asarray(s, jnp.int32)
+        return cache
+    cache = dict(cache)
+    n = min(s, m)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k[:, :, :n], (0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v[:, :, :n], (0, 0, 0, 0))
+    if cfg.window:
+        cache["slot_pos"] = cache["slot_pos"].at[:n].set(jnp.arange(n))
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return cache
+
+
+def _masked_decode_attn(q, k, v, mask, sm_scale):
+    """q (B,H,1,hd), k/v (B,Hk,M,hd), mask (M,) bool. Grouped einsum (no kv
+    replication in HBM — decode is memory-bound, this is the point). The
+    cache is consumed in its storage dtype with f32 MXU accumulation —
+    materializing an f32 copy of a 32k cache would double decode traffic."""
+    b, h, _, hd = q.shape
+    hk = k.shape[1]
+    g = h // hk
+    qg = q.reshape(b, hk, g, hd)
+    s = jnp.einsum("bkgd,bkmd->bkgm", qg, k,
+                   preferred_element_type=jnp.float32) * sm_scale
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgm,bkmd->bkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, 1, hd).astype(q.dtype)
+
+
+def gqa_decode(params, x, cache, cfg):
+    """One-token decode. x: (B, 1, d_model). Returns (y, new_cache)."""
+    b = x.shape[0]
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    pos = cache["pos"]                      # tokens already in cache
+    q, k1, v1 = _qkv(params, x, cfg)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k1 = apply_rope(k1, pos, cfg.rope_theta)
+
+    m = cache["k"].shape[2]
+    cache = dict(cache)
+    if cfg.window:
+        slot = pos % m
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k1, (0, 0, slot, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v1, (0, 0, slot, 0))
+        cache["slot_pos"] = jax.lax.dynamic_update_slice(
+            cache["slot_pos"], pos[None], (slot,))
+        mask = (cache["slot_pos"] >= 0) & (cache["slot_pos"] <= pos)
+    else:
+        write = jnp.minimum(pos, m - 1)     # clamp (cache sized for max_len)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k1, (0, 0, write, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v1, (0, 0, write, 0))
+        mask = jnp.arange(m) <= write
+    cache["pos"] = pos + 1
+
+    o = _masked_decode_attn(q, cache["k"], cache["v"], mask, hd ** -0.5)
+    y = o.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ params["wo"]
+    return y, cache
+
+
+# ===========================================================================
+# MLA (deepseek-v2): latent-compressed KV; absorbed decode
+# ===========================================================================
+
+def mla_init(rng, cfg, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope, dv, lora = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    k0, k1, k2, k3 = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(k0, (d, h * (nope + rope)), dtype),
+        "wkv_a": dense_init(k1, (d, lora + rope), dtype),
+        "kv_norm": jnp.ones((lora,), jnp.float32),
+        "wkv_b": dense_init(k2, (lora, h * (nope + dv)), dtype),
+        "wo": dense_init(k3, (h * dv, d), dtype),
+    }
+
+
+def _mla_qkr(params, x, cfg, positions):
+    """Project to per-head q and the shared latent (c_kv, k_rope)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    lora = cfg.kv_lora_rank
+    q = (x @ params["wq"]).reshape(b, s, h, nope + rope).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv_a = x @ params["wkv_a"]                          # (B,S,lora+rope)
+    c_kv = rmsnorm(kv_a[..., :lora], params["kv_norm"], eps=cfg.norm_eps)
+    k_rope = kv_a[..., None, lora:].transpose(0, 2, 1, 3)  # (B,1,S,rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(params, x, cfg, *, positions=None, return_latent=False):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.arange(s)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(params, x, cfg, positions)
+    kv = (c_kv @ params["wkv_b"]).reshape(b, s, h, nope + dv).transpose(0, 2, 1, 3)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)       # (B,H,S,nope+rope)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (b, h, s, rope))], axis=-1)
+    q = shard_activation(q, "act_bhsd")
+    k = shard_activation(k, "act_bhsd")
+    if kernel_backend() == "pallas":
+        o = flash_attention(q, k, v, causal=True)
+    elif s > _CHUNKED_THRESHOLD:
+        o = mha_chunked(q, k, v, causal=True)
+    else:
+        o = mha_ref(q, k, v, causal=True)
+    y = o.transpose(0, 2, 1, 3).reshape(b, s, -1) @ params["wo"]
+    if return_latent:
+        return y, (c_kv, k_rope[:, 0])                   # (B,S,lora), (B,S,rope)
+    return y
+
+
+def mla_cache_init(cfg, batch, max_len, dtype):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_prefill_cache(cache, latent, cfg):
+    c_kv, k_rope = latent
+    s = c_kv.shape[1]
+    cache = dict(cache)
+    cache["ckv"] = jax.lax.dynamic_update_slice(
+        cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, 0, 0))
+    cache["krope"] = jax.lax.dynamic_update_slice(
+        cache["krope"], k_rope.astype(cache["krope"].dtype), (0, 0, 0))
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    return cache
+
+
+def mla_decode(params, x, cache, cfg):
+    """Absorbed-matmul decode: scores/outputs computed in latent space —
+    the cache stays (lora+rope)-wide, W_uk/W_uv are folded into q / output."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    nope, rope, dv, lora = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                            cfg.kv_lora_rank)
+    pos = cache["pos"]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(params, x, cfg, pos)
+    # write the new token's latent into the cache
+    m = cache["ckv"].shape[1]
+    write = jnp.minimum(pos, m - 1)
+    cache = dict(cache)
+    cache["ckv"] = jax.lax.dynamic_update_slice(
+        cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, write, 0))
+    cache["krope"] = jax.lax.dynamic_update_slice(
+        cache["krope"], k_rope[:, 0].astype(cache["krope"].dtype), (0, write, 0))
+    cache["pos"] = pos + 1
+
+    wkv_b = params["wkv_b"].reshape(lora, h, nope + dv)
+    w_uk = wkv_b[..., :nope]                              # (lora, H, nope)
+    w_uv = wkv_b[..., nope:]                              # (lora, H, dv)
+    # absorb W_uk into q: q_lat (B,H,lora). The latent cache is consumed in
+    # its storage dtype (f32 MXU accumulation) — no f32 cache copy.
+    cache_dt = cache["ckv"].dtype
+    q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, :, 0], w_uk,
+                       preferred_element_type=jnp.float32)
+    sm_scale = (nope + rope) ** -0.5
+    s = (jnp.einsum("bhl,bml->bhm", q_lat.astype(cache_dt), cache["ckv"],
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhr,bmr->bhm", q_rope[:, :, 0].astype(cache_dt),
+                      cache["krope"], preferred_element_type=jnp.float32))
+    s = s * sm_scale
+    mask = jnp.arange(m) <= write
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhm,bml->bhl", p.astype(cache_dt), cache["ckv"],
+                       preferred_element_type=jnp.float32)  # (B,H,lora)
+    o = jnp.einsum("bhl,lhd->bhd", o_lat.astype(x.dtype), w_uv,
+                   preferred_element_type=jnp.float32)
+    y = o.reshape(b, 1, h * dv).astype(x.dtype) @ params["wo"]
+    return y, cache

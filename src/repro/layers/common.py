@@ -1,0 +1,62 @@
+"""Shared layer utilities: init, norms, kernel-backend selection."""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm import rmsnorm as rmsnorm_pallas_op
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+__all__ = [
+    "dense_init", "rms_init", "rmsnorm", "kernel_backend", "use_kernel_backend",
+    "silu", "softplus",
+]
+
+# Which realization the perf-critical ops use: "jnp" (XLA-fused reference,
+# used for the multi-pod dry-run) or "pallas" (TPU kernels; interpret on CPU).
+_kernel_backend: contextvars.ContextVar[str] = contextvars.ContextVar(
+    "repro_kernel_backend", default="jnp")
+
+
+def kernel_backend() -> str:
+    return _kernel_backend.get()
+
+
+@contextlib.contextmanager
+def use_kernel_backend(name: str):
+    assert name in ("jnp", "pallas"), name
+    tok = _kernel_backend.set(name)
+    try:
+        yield
+    finally:
+        _kernel_backend.reset(tok)
+
+
+def dense_init(rng, shape, dtype, *, scale: float | None = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(rng, -3, 3, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def rms_init(shape):
+    return jnp.ones(shape, jnp.float32)
+
+
+def rmsnorm(x, w, *, eps=1e-6):
+    if kernel_backend() == "pallas":
+        return rmsnorm_pallas_op(x, w, eps=eps)
+    return rmsnorm_ref(x, w, eps=eps)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def softplus(x):
+    return jax.nn.softplus(x)

@@ -1,0 +1,27 @@
+"""SwiGLU MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.context import shard_activation
+
+from .common import dense_init, silu
+
+__all__ = ["mlp_init", "mlp_forward"]
+
+
+def mlp_init(rng, d_model: int, d_ff: int, dtype):
+    k0, k1, k2 = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(k0, (d_model, d_ff), dtype),
+        "w_up": dense_init(k1, (d_model, d_ff), dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), dtype),
+    }
+
+
+def mlp_forward(params, x):
+    h = silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = shard_activation(h, "act_btf")
+    return h @ params["w_down"]

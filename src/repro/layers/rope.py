@@ -1,0 +1,37 @@
+"""Rotary and sinusoidal position embeddings."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rope_freqs", "apply_rope", "sinusoidal_embedding"]
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, H, S, D) with even D; positions: (S,) or (B, S) or scalar."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    pos = jnp.asarray(positions, jnp.float32)
+    angles = pos[..., None] * freqs                    # (..., S, D/2)
+    cos = jnp.cos(angles)
+    sin = jnp.sin(angles)
+    while cos.ndim < x.ndim:                           # broadcast to (B,H,S,D/2)
+        cos = cos[None]
+        sin = sin[None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions, d_model: int):
+    """(S,) -> (S, d_model) classic transformer sinusoids."""
+    pos = jnp.asarray(positions, jnp.float32)[..., None]
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,1 @@
+from .lm import LM, StackSpec, build_program, pad_vocab  # noqa: F401

@@ -1,0 +1,381 @@
+"""Unified decoder LM covering all assigned architecture families.
+
+A model is a *program* of homogeneous layer stacks (dense / moe / mamba1 /
+mamba2 / zamba groups), each scanned with ``lax.scan`` over stacked layer
+params so compile time and HLO size are ~O(1) in depth. Modality frontends
+are stubs per the assignment: precomputed prefix embeddings are prepended to
+the token embeddings (vision patches / audio conditioning).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.layers import blocks
+from repro.layers.common import dense_init, rmsnorm
+from repro.layers.rope import sinusoidal_embedding
+from repro.parallel.context import shard_activation
+
+__all__ = ["LM", "StackSpec", "build_program", "pad_vocab"]
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    """Megatron-style vocab padding so embeddings always shard."""
+    return -(-v // multiple) * multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class StackSpec:
+    kind: str           # dense | moe | mamba1 | mamba2 | zamba_group
+    n: int
+    group: int = 0      # zamba_group: mamba layers per shared-attn application
+
+
+def build_program(cfg: ArchConfig) -> list[StackSpec]:
+    if cfg.shared_attn_every:                       # zamba2 hybrid
+        g = cfg.shared_attn_every
+        ngroups = cfg.n_layers // g
+        tail = cfg.n_layers - ngroups * g
+        prog = [StackSpec("zamba_group", ngroups, group=g)]
+        if tail:
+            prog.append(StackSpec("mamba2", tail))
+        return prog
+    if cfg.ssm_type == "mamba1":
+        return [StackSpec("mamba1", cfg.n_layers)]
+    if cfg.ssm_type == "mamba2":
+        return [StackSpec("mamba2", cfg.n_layers)]
+    if cfg.n_experts:
+        prog = []
+        if cfg.first_dense_layers:
+            prog.append(StackSpec("dense", cfg.first_dense_layers))
+        prog.append(StackSpec("moe", cfg.n_layers - cfg.first_dense_layers))
+        return prog
+    return [StackSpec("dense", cfg.n_layers)]
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig, *, remat: str = "none",
+                 moe_dispatch: str = "einsum", scan_layers: bool = True,
+                 ce_chunks: int = 1):
+        assert remat in ("none", "full", "dots")
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.program = build_program(cfg)
+        self.vpad = pad_vocab(cfg.vocab_size)
+        self.remat = remat
+        self.moe_dispatch = moe_dispatch
+        # ce_chunks > 1: compute CE in sequence chunks with rematerialized
+        # per-chunk logits — peak logits memory drops by the chunk count
+        self.ce_chunks = ce_chunks
+        # scan_layers=False unrolls the layer loops (python for). Used by the
+        # dry-run cost extrapolation: HLO cost analysis counts a while-loop
+        # body ONCE regardless of trip count, so per-layer costs are measured
+        # on small unrolled variants and extrapolated linearly.
+        self.scan_layers = scan_layers
+
+    def _scan_or_loop(self, body, x, xs, n):
+        if self.scan_layers:
+            return jax.lax.scan(body, x, xs)
+        ys = []
+        for i in range(n):
+            x, y = body(x, jax.tree.map(lambda a: a[i], xs))
+            ys.append(y)
+        ystack = jax.tree.map(lambda *v: jnp.stack(v), *ys)
+        return x, ystack
+
+    # ------------------------------------------------------------------ init
+    def _layer_init(self, rng, kind):
+        cfg, dtype = self.cfg, self.dtype
+        if kind == "dense":
+            return blocks.tblock_init(rng, cfg, dtype, moe=False)
+        if kind == "moe":
+            return blocks.tblock_init(rng, cfg, dtype, moe=True)
+        if kind in ("mamba1", "mamba2"):
+            return blocks.mamba_block_init(rng, cfg, dtype)
+        raise ValueError(kind)
+
+    def _stack_init(self, rng, spec: StackSpec):
+        if spec.kind == "zamba_group":
+            keys = jax.random.split(rng, spec.n * spec.group)
+            keys = keys.reshape(spec.n, spec.group, *keys.shape[1:])
+            inner = jax.vmap(lambda k: self._layer_init(k, "mamba2"))
+            return jax.vmap(inner)(keys)
+        keys = jax.random.split(rng, spec.n)
+        return jax.vmap(lambda k: self._layer_init(k, spec.kind))(keys)
+
+    def init(self, rng):
+        cfg, dtype = self.cfg, self.dtype
+        keys = jax.random.split(rng, len(self.program) + 3)
+        params = {
+            "embed": dense_init(keys[0], (self.vpad, cfg.d_model), dtype,
+                                scale=cfg.d_model ** -0.5),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = dense_init(keys[1], (cfg.d_model, self.vpad), dtype)
+        if cfg.shared_attn_every:
+            params["shared_attn"] = blocks.tblock_init(keys[2], cfg, dtype, moe=False)
+        params["stacks"] = [self._stack_init(k, spec)
+                            for k, spec in zip(keys[3:], self.program)]
+        return params
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+    def active_param_count(self, params) -> int:
+        """Parameters touched per token (MoE: only top-k experts count)."""
+        cfg = self.cfg
+        total = self.param_count(params)
+        if not cfg.n_experts:
+            return total
+        # subtract inactive expert fraction
+        stack = params["stacks"][-1]
+        expert_leaves = [stack["moe"][k] for k in ("w_gate", "w_up", "w_down")]
+        expert_params = sum(x.size for x in expert_leaves)
+        inactive = expert_params * (1 - cfg.n_experts_per_tok / cfg.n_experts)
+        return int(total - inactive)
+
+    # --------------------------------------------------------------- embed
+    def _embed(self, params, tokens, prefix_embeddings=None, pos0=0):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.embed_scale:
+            x = x * math.sqrt(cfg.d_model)
+        if prefix_embeddings is not None:
+            x = jnp.concatenate([prefix_embeddings.astype(x.dtype), x], axis=1)
+        if cfg.pos_embed == "sinusoidal":
+            pos = sinusoidal_embedding(pos0 + jnp.arange(x.shape[1]), cfg.d_model)
+            x = x + pos[None].astype(x.dtype)
+        return shard_activation(x, "act_btd")
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        logits = jnp.einsum("...d,dv->...v", x, head,
+                            preferred_element_type=jnp.float32)
+        # mask padded vocab entries
+        pad_mask = jnp.where(jnp.arange(self.vpad) < cfg.vocab_size, 0.0, -1e30)
+        logits = logits + pad_mask
+        return shard_activation(logits, "act_btv")
+
+    # -------------------------------------------------------------- forward
+    def _wrap_remat(self, body):
+        if self.remat == "none":
+            return body
+        policy = None
+        if self.remat == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(body, policy=policy)
+
+    def _stack_forward(self, params, stack_params, x, spec, prefix_len):
+        cfg = self.cfg
+
+        if spec.kind == "zamba_group":
+            shared = params["shared_attn"]
+
+            def body(x, gp):
+                def inner(x, lp):
+                    return blocks.mamba_block_forward(lp, x, cfg)
+                x, auxs = self._scan_or_loop(inner, x, gp, spec.group)
+                x, aux2 = blocks.tblock_forward(shared, x, cfg, moe=False)
+                return x, auxs.sum(0) + aux2
+        else:
+            moe = spec.kind == "moe"
+
+            def body(x, lp):
+                if spec.kind in ("mamba1", "mamba2"):
+                    return blocks.mamba_block_forward(lp, x, cfg)
+                return blocks.tblock_forward(lp, x, cfg, moe=moe,
+                                             prefix_len=prefix_len,
+                                             dispatch=self.moe_dispatch)
+
+        x, auxs = self._scan_or_loop(self._wrap_remat(body), x, stack_params,
+                                     spec.n)
+        return x, auxs.sum(0)
+
+    def forward(self, params, tokens, prefix_embeddings=None):
+        """Full-sequence forward. Returns (logits (B,S*,Vpad) f32, aux[2])."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, prefix_embeddings)
+        prefix_len = (prefix_embeddings.shape[1]
+                      if (prefix_embeddings is not None and cfg.prefix_lm) else 0)
+        aux = blocks.ZERO_AUX
+        for spec, sp in zip(self.program, params["stacks"]):
+            x, a = self._stack_forward(params, sp, x, spec, prefix_len)
+            aux = aux + a
+        x = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+        return self._logits(params, x), aux
+
+    def _ce_from_hidden(self, params, x, labels):
+        """CE over sequence chunks with rematerialized logits (peak-memory
+        lever: nothing (B, S, Vpad)-f32-shaped is live across the step)."""
+        b, s, d = x.shape
+        k = self.ce_chunks
+        while s % k:
+            k -= 1
+
+        def chunk_ce(args):
+            xc, lc = args
+            logits = self._logits(params, xc)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            onehot = jax.nn.one_hot(lc, self.vpad, dtype=logits.dtype)
+            gold = jnp.sum(logits * onehot, axis=-1)
+            return jnp.sum(logz - gold)
+
+        body = jax.checkpoint(chunk_ce)
+        xs = x.reshape(b, k, s // k, d).swapaxes(0, 1)
+        ls = labels.reshape(b, k, s // k).swapaxes(0, 1)
+        total, _ = jax.lax.scan(lambda acc, a: (acc + body(a), None), 0.0,
+                                (xs, ls))
+        return total / (b * s)
+
+    # ----------------------------------------------------------------- loss
+    def loss(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        prefix = batch.get("prefix_embeddings")
+        p = prefix.shape[1] if prefix is not None else 0
+        labels = tokens[:, 1:]
+        if self.ce_chunks > 1:
+            # forward to the final hidden states, CE in seq chunks
+            x = self._embed(params, tokens, prefix)
+            prefix_len = p if (prefix is not None and cfg.prefix_lm) else 0
+            aux = ZERO = jnp.zeros(2, jnp.float32)
+            for spec, sp in zip(self.program, params["stacks"]):
+                x, a = self._stack_forward(params, sp, x, spec, prefix_len)
+                aux = aux + a
+            x = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+            pred_x = x[:, p:-1] if x.shape[1] > p + 1 else x[:, p:]
+            ce = self._ce_from_hidden(params, pred_x, labels)
+        else:
+            logits, aux = self.forward(params, tokens, prefix_embeddings=prefix)
+            pred = logits[:, p:-1] if logits.shape[1] > p + 1 else logits[:, p:]
+            logz = jax.nn.logsumexp(pred, axis=-1)
+            onehot = jax.nn.one_hot(labels, self.vpad, dtype=pred.dtype)
+            gold = jnp.sum(pred * onehot, axis=-1)
+            ce = jnp.mean(logz - gold)
+        lb, z = aux[0], aux[1]
+        nl = max(sum(s.n * max(s.group, 1) for s in self.program), 1)
+        total = ce + (0.02 * lb + 1e-3 * z) / nl
+        metrics = {"ce": ce, "moe_lb": lb, "moe_z": z}
+        return total, metrics
+
+    # ---------------------------------------------------------------- cache
+    def _stack_cache_init(self, spec, batch, max_len, dtype):
+        cfg = self.cfg
+
+        def stacked(n, single):
+            return jax.tree.map(lambda a: jnp.zeros((n,) + a.shape, a.dtype), single)
+
+        if spec.kind == "zamba_group":
+            mamba_single = blocks.mamba_block_cache_init(cfg, batch, dtype)
+            attn_single = blocks.tblock_cache_init(cfg, batch, max_len, dtype)
+            return {
+                "mamba": stacked(spec.n, stacked(spec.group, mamba_single)),
+                "attn": stacked(spec.n, attn_single),
+            }
+        if spec.kind in ("mamba1", "mamba2"):
+            return stacked(spec.n, blocks.mamba_block_cache_init(cfg, batch, dtype))
+        return stacked(spec.n, blocks.tblock_cache_init(cfg, batch, max_len, dtype))
+
+    def init_cache(self, batch, max_len, dtype=None):
+        dtype = dtype or self.dtype
+        return {"pos": jnp.zeros((), jnp.int32),
+                "stacks": [self._stack_cache_init(s, batch, max_len, dtype)
+                           for s in self.program]}
+
+    # -------------------------------------------------------------- prefill
+    def prefill(self, params, tokens, prefix_embeddings=None, max_len=None):
+        """Returns (last-token logits (B, Vpad), cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, prefix_embeddings)
+        max_len = max_len or x.shape[1]
+        prefix_len = (prefix_embeddings.shape[1]
+                      if (prefix_embeddings is not None and cfg.prefix_lm) else 0)
+        caches = []
+        for spec, sp in zip(self.program, params["stacks"]):
+            if spec.kind == "zamba_group":
+                shared = params["shared_attn"]
+
+                def body(x, gp):
+                    def inner(x, lp):
+                        y, aux, c = blocks.mamba_block_prefill(lp, x, cfg,
+                                                               cache_dtype=self.dtype)
+                        return y, c
+                    x, cm = self._scan_or_loop(inner, x, gp, spec.group)
+                    x, _, ca = blocks.tblock_prefill(shared, x, cfg, moe=False,
+                                                     max_len=max_len,
+                                                     cache_dtype=self.dtype)
+                    return x, {"mamba": cm, "attn": ca}
+            elif spec.kind in ("mamba1", "mamba2"):
+                def body(x, lp):
+                    y, _, c = blocks.mamba_block_prefill(lp, x, cfg,
+                                                         cache_dtype=self.dtype)
+                    return y, c
+            else:
+                moe = spec.kind == "moe"
+
+                def body(x, lp, moe=moe):
+                    y, _, c = blocks.tblock_prefill(lp, x, cfg, moe=moe,
+                                                    max_len=max_len,
+                                                    prefix_len=prefix_len,
+                                                    dispatch=self.moe_dispatch,
+                                                    cache_dtype=self.dtype)
+                    return y, c
+
+            x, cache = self._scan_or_loop(body, x, sp, spec.n)
+            caches.append(cache)
+        x = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        return logits, {"pos": jnp.asarray(x.shape[1], jnp.int32),
+                        "stacks": caches}
+
+    # ------------------------------------------------------------- decoding
+    def decode_step(self, params, tokens, cache):
+        """One token for every sequence. tokens: (B, 1). Returns
+        (logits (B, Vpad), new_cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, pos0=cache.get("pos", 0))
+        new_caches = []
+        for spec, sp, sc in zip(self.program, params["stacks"], cache["stacks"]):
+            if spec.kind == "zamba_group":
+                shared = params["shared_attn"]
+
+                def body(x, args):
+                    gp, gc = args
+
+                    def inner(x, a):
+                        lp, lc = a
+                        y, nc = blocks.mamba_block_decode(lp, x, lc, cfg)
+                        return y, nc
+                    x, ncm = self._scan_or_loop(inner, x, (gp, gc["mamba"]),
+                                                spec.group)
+                    x, nca = blocks.tblock_decode(shared, x, gc["attn"], cfg)
+                    return x, {"mamba": ncm, "attn": nca}
+            elif spec.kind in ("mamba1", "mamba2"):
+                def body(x, args):
+                    lp, lc = args
+                    y, nc = blocks.mamba_block_decode(lp, x, lc, cfg)
+                    return y, nc
+            else:
+                moe = spec.kind == "moe"
+
+                def body(x, args, moe=moe):
+                    lp, lc = args
+                    y, nc = blocks.tblock_decode(lp, x, lc, cfg, moe=moe,
+                                                 dispatch=self.moe_dispatch)
+                    return y, nc
+
+            x, nc = self._scan_or_loop(body, x, (sp, sc), spec.n)
+            new_caches.append(nc)
+        x = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+        logits = self._logits(params, x)[:, 0]
+        return logits, {"pos": cache.get("pos", 0) + 1, "stacks": new_caches}
+
+    def greedy_token(self, logits):
+        return jnp.argmax(logits[..., :self.cfg.vocab_size], axis=-1)

@@ -1,0 +1,1 @@
+from .adamw import AdamW, WarmupCosine, global_norm  # noqa: F401

@@ -1,0 +1,4 @@
+from .context import Rules, shard_activation, use_rules  # noqa: F401
+from .rules import batch_specs, param_specs, spec_bytes_per_device, zero1_specs  # noqa: F401
+from .steps import (axis_names, build_prefill_step, build_serve_step,  # noqa: F401
+                    build_train_step, cache_pspecs, make_shardings)

@@ -1,0 +1,87 @@
+"""Ambient parallelism context: logical-axis activation sharding.
+
+Models call ``shard_activation(x, kind)``; with no mesh configured this is a
+no-op (CPU smoke tests), under ``use_rules(mesh_axes)`` it emits
+``with_sharding_constraint`` with the mapped PartitionSpec. Kinds:
+
+  "act_btd"  (batch, seq, d_model)       -> (batch_axes, seq_axes, None)
+  "act_btf"  (batch, seq, features)      -> (batch_axes, None, "model")
+  "act_bhsd" (batch, heads, seq, hd)     -> (batch_axes, "model", None, None)
+  "act_bd"   (batch, d)                  -> (batch_axes, None)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["shard_activation", "use_rules", "current_rules", "Rules"]
+
+
+class Rules:
+    def __init__(self, *, batch_axes=("pod", "data"), model_axis="model",
+                 seq_axes=None, mesh=None):
+        self.batch_axes = batch_axes
+        self.model_axis = model_axis
+        self.seq_axes = seq_axes
+        self.mesh = mesh
+
+    def spec(self, kind: str) -> Optional[P]:
+        b, m, s = self.batch_axes, self.model_axis, self.seq_axes
+        table = {
+            "act_btd": P(b, s, None),
+            "act_btf": P(b, None, m),
+            "act_bhsd": P(b, m, None, None),
+            "act_bd": P(b, None),
+            "act_btv": P(b, None, m),
+        }
+        return table.get(kind)
+
+
+_rules: contextvars.ContextVar[Optional[Rules]] = contextvars.ContextVar(
+    "repro_parallel_rules", default=None)
+
+
+def current_rules() -> Optional[Rules]:
+    return _rules.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    tok = _rules.set(rules)
+    try:
+        yield
+    finally:
+        _rules.reset(tok)
+
+
+def shard_activation(x, kind: str):
+    rules = _rules.get()
+    if rules is None:
+        return x
+    spec = rules.spec(kind)
+    if spec is None:
+        return x
+    if rules.mesh is not None:
+        # drop axes that do not divide the dim — an invalid constraint would
+        # either fail or push GSPMD into "involuntary full rematerialization"
+        # (replicate-then-reshard), which shows up as huge collectives.
+        entries = []
+        for i, ax in enumerate(spec):
+            if ax is None or i >= x.ndim:
+                entries.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= rules.mesh.shape[a]
+            entries.append(ax if x.shape[i] % size == 0 else None)
+        spec = P(*entries)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x  # no mesh in scope (eager smoke test) — constraint is advisory

@@ -1,0 +1,172 @@
+"""Per-parameter PartitionSpec rules with divisibility checks.
+
+Tensor-parallel layout over the "model" axis (Megatron conventions), DP over
+("pod","data"). Stacked layer params (leading scan axes) get None-prefixed
+specs. Any dim that does not divide its mesh axis falls back to replication
+(e.g. KV heads < model axis — recorded in DESIGN.md). MoE experts shard over
+"model" when divisible (EP, deepseek 64e) else expert FFN dims shard (TP-MoE,
+mixtral 8e).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+__all__ = ["param_specs", "batch_specs", "zero1_specs", "spec_bytes_per_device"]
+
+
+# rule table: leaf name -> spec template for its BASE (unstacked) dims.
+# "m" = model axis, None = replicated. Checked for divisibility at apply time.
+_RULES_2D = {
+    "embed": ("m", None),
+    "head": (None, "m"),
+    "wq": (None, "m"), "wk": (None, "m"), "wv": (None, "m"), "wo": ("m", None),
+    "wkv_a": (None, None), "wkv_b": (None, "m"),
+    "w_gate": (None, "m"), "w_up": (None, "m"), "w_down": ("m", None),
+    "in_proj": (None, "m"), "out_proj": ("m", None),
+    "in_x": (None, "m"), "in_z": (None, "m"),
+    "in_xbc": (None, "m"), "in_dt": (None, "m"),
+    "x_proj": ("m", None), "dt_w": (None, "m"),
+    "conv_w": (None, "m"),
+    "A_log": ("m", None),          # mamba1 (di, N)
+    "router": (None, None),
+}
+_RULES_1D = {
+    "conv_b": ("m",), "dt_bias": ("m",), "D": ("m",), "norm_w": ("m",),
+    "A_log": ("m",),               # mamba2 (H,)
+    "kv_norm": (None,),
+    "norm": (None,), "norm1": (None,), "norm2": (None,), "final_norm": (None,),
+    "embed": (None,),
+}
+# MoE expert stacks (E, d, f) / (E, f, d): EP over experts when divisible,
+# else TP over the ffn dim.
+_EXPERT_3D = {
+    "w_gate": (("m", None, None), (None, None, "m")),
+    "w_up": (("m", None, None), (None, None, "m")),
+    "w_down": (("m", None, None), (None, "m", None)),
+}
+
+
+def _names_of(path):
+    out = []
+    for p in path:
+        if isinstance(p, DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, SequenceKey):
+            out.append(f"[{p.idx}]")
+    return out
+
+
+def _apply_divisibility(template, shape, mesh, model_axis):
+    spec = []
+    msize = mesh.shape[model_axis]
+    for dim, t in zip(shape, template):
+        if t == "m" and dim % msize == 0:
+            spec.append(model_axis)
+        else:
+            spec.append(None)
+    return tuple(spec)
+
+
+def param_specs(params, cfg, mesh, *, model_axis="model"):
+    """Returns a pytree of PartitionSpec matching ``params``."""
+    msize = mesh.shape[model_axis]
+
+    def assign(path, leaf):
+        names = _names_of(path)
+        name = names[-1]
+        nd = leaf.ndim
+
+        # figure out base (unstacked) rank by peeling leading stack dims:
+        # stacked layer params have 1 (stack) or 2 (zamba group) extra dims.
+        in_stack = any(n == "stacks" for n in names)
+        extra = 0
+        base_shape = leaf.shape
+        if in_stack:
+            # zamba groups are (n, group, ...): detect via known base ranks
+            for extra_try in (1, 2):
+                base = leaf.shape[extra_try:]
+                if name in _RULES_1D and len(base) == 1:
+                    extra = extra_try
+                    break
+                if name in _RULES_2D and len(base) == 2:
+                    extra = extra_try
+                    break
+                if name in _EXPERT_3D and len(base) == 3 and not (
+                        name in _RULES_2D and len(base) == 2):
+                    extra = extra_try
+                    break
+            else:
+                extra = 1
+            base_shape = leaf.shape[extra:]
+
+        # MoE expert weights: base rank 3
+        if name in _EXPERT_3D and len(base_shape) == 3:
+            ep, tp = _EXPERT_3D[name]
+            template = ep if base_shape[0] % msize == 0 else tp
+            spec = _apply_divisibility(template, base_shape, mesh, model_axis)
+            return P(*([None] * extra + list(spec)))
+
+        if len(base_shape) == 1 and name in _RULES_1D:
+            spec = _apply_divisibility(_RULES_1D[name], base_shape, mesh,
+                                       model_axis)
+            return P(*([None] * extra + list(spec)))
+
+        if len(base_shape) == 2 and name in _RULES_2D:
+            spec = _apply_divisibility(_RULES_2D[name], base_shape, mesh,
+                                       model_axis)
+            return P(*([None] * extra + list(spec)))
+
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def batch_specs(batch_shapes, *, batch_axes=("pod", "data")):
+    """Shard every input's leading dim over the DP axes."""
+    def assign(leaf):
+        nd = len(leaf.shape)
+        return P(*([batch_axes] + [None] * (nd - 1)))
+    return jax.tree.map(assign, batch_shapes)
+
+
+def zero1_specs(pspecs, params, mesh, *, data_axis="data"):
+    """Optimizer-moment specs: param spec + shard the largest replicated dim
+    over the data axis when divisible (ZeRO-1)."""
+    dsize = mesh.shape[data_axis]
+
+    def assign(spec, leaf):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        best, best_dim = -1, -1
+        for i, (e, s) in enumerate(zip(entries, leaf.shape)):
+            if e is None and s % dsize == 0 and s > best:
+                best, best_dim = s, i
+        if best_dim >= 0 and best >= 1024:
+            entries[best_dim] = data_axis
+        return P(*entries)
+
+    return jax.tree.map(assign, pspecs, params,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def spec_bytes_per_device(shapes, specs, mesh) -> int:
+    """Bytes/device implied by the shardings (analytic memory check)."""
+    total = 0
+    flat_shapes = jax.tree.leaves(shapes)
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    for sds, spec in zip(flat_shapes, flat_specs):
+        n = 1
+        for i, d in enumerate(sds.shape):
+            ax = spec[i] if i < len(spec) else None
+            if ax is None:
+                n *= d
+            else:
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                size = 1
+                for a in axes:
+                    size *= mesh.shape[a]
+                n *= -(-d // size)
+        total += n * sds.dtype.itemsize
+    return total

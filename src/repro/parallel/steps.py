@@ -1,0 +1,270 @@
+"""Distributed step builders: sharded train / prefill / serve steps.
+
+Builds the pjit-able step functions plus the NamedShardings for params,
+optimizer state, batches and KV/SSM caches, wiring in the ambient
+activation-sharding rules. Used by the launcher and by the multi-pod
+dry-run (which lowers exactly these functions).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import rules as R
+from repro.parallel.context import Rules, use_rules
+
+__all__ = [
+    "axis_names", "make_shardings", "cache_pspecs", "build_train_step",
+    "build_prefill_step", "build_serve_step",
+]
+
+
+def axis_names(mesh: Mesh):
+    names = mesh.axis_names
+    batch_axes = tuple(n for n in names if n in ("pod", "data"))
+    return batch_axes, "model"
+
+
+def _named(mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _join(a, b):
+    """Combine two axis selections for one dim into a tuple spec entry."""
+    if a is None:
+        return b
+    if b is None:
+        return a
+    at = a if isinstance(a, tuple) else (a,)
+    bt = b if isinstance(b, tuple) else (b,)
+    return at + bt
+
+
+def make_shardings(model, mesh: Mesh, *, fsdp: bool = False):
+    """Returns (param_shardings, pspecs, rules) for a model on a mesh.
+
+    ``fsdp=True`` additionally shards each param's largest replicated dim over
+    the data axis (ZeRO-3 via GSPMD: XLA all-gathers weights per layer)."""
+    batch_axes, model_axis = axis_names(mesh)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = R.param_specs(params_shape, model.cfg, mesh, model_axis=model_axis)
+    if fsdp and "data" in mesh.axis_names:
+        pspecs = R.zero1_specs(pspecs, params_shape, mesh, data_axis="data")
+    rules = Rules(batch_axes=batch_axes, model_axis=model_axis, mesh=mesh)
+    return _named(mesh, pspecs), pspecs, rules
+
+
+# ---------------------------------------------------------------------------
+# cache partition specs (per stack kind; base ranks are kind-specific)
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(model, mesh: Mesh, batch: int, max_len: int,
+                 kind: str = "decode"):
+    """kind="decode": layouts optimized for per-token reads (seq-sharded
+    fallback for kv_heads < model axis — §Perf it2). kind="prefill": the
+    natural layout of the freshly computed k/v (head/head-dim sharded) —
+    bulk-writing a 32k cache into the seq-sharded layout costs a full
+    reshard per layer; the one-time handoff reshard at prefill->decode is
+    the cheaper place to pay it (measured: v2 prefill regression)."""
+    cfg = model.cfg
+    batch_axes, m = axis_names(mesh)
+    bsize = math.prod(mesh.shape[a] for a in batch_axes)
+    b_ax = batch_axes if batch % bsize == 0 else None
+    # if batch can't shard (long_500k B=1), shard the sequence dim instead
+    seq_ax = None if b_ax is not None else batch_axes
+
+    def div(dim, axis):
+        if axis is None:
+            return None
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        size = math.prod(mesh.shape[a] for a in axes)
+        return axis if dim % size == 0 else None
+
+    hk, hd = max(cfg.n_kv_heads, 1), cfg.resolved_head_dim
+    win = min(max_len, cfg.window) if cfg.window else max_len
+    msize = mesh.shape[m]
+
+    def attn_spec():
+        if cfg.attn_type == "mla":
+            lora = cfg.kv_lora_rank
+            return {
+                "ckv": P(b_ax, div(max_len, seq_ax), div(lora, m)),
+                "krope": P(b_ax, div(max_len, seq_ax), None),
+                "pos": P(),
+            }
+        # kv heads < model axis (GQA/MQA/MHA with few kv heads): for DECODE,
+        # shard the cache SEQUENCE dim over the model axis — replicated 32k
+        # caches would blow HBM, and head_dim sharding forces GSPMD to
+        # replicate the cache around the decode einsums (involuntary full
+        # rematerialization; measured in §Perf it2). Softmax over the
+        # seq-sharded scores uses cheap partial-max/sum reductions. For
+        # PREFILL, keep the computed k/v's natural layout (head-dim sharded).
+        hd_ax = None
+        if hk % msize == 0:
+            head_ax, kseq_ax = m, div(win, seq_ax)
+        elif kind == "decode":
+            head_ax = None
+            kseq_ax = _join(div(win, seq_ax), m if win % msize == 0 else None)
+        else:  # prefill
+            head_ax = None
+            kseq_ax = div(win, seq_ax)
+            hd_ax = m if hd % msize == 0 else None
+        d = {
+            "k": P(b_ax, head_ax, kseq_ax, hd_ax),
+            "v": P(b_ax, head_ax, kseq_ax, hd_ax),
+            "pos": P(),
+        }
+        if cfg.window:
+            d["slot_pos"] = P(kseq_ax)
+        return d
+
+    def mamba_spec():
+        if cfg.ssm_type == "mamba1":
+            di = cfg.resolved_d_inner
+            return {
+                "conv": P(b_ax, None, div(di, m)),
+                "h": P(b_ax, div(di, m), None),
+            }
+        di, n, p = cfg.resolved_d_inner, cfg.ssm_state, cfg.ssm_head_dim
+        h = di // p
+        return {
+            "conv": P(b_ax, None, div(di + 2 * n, m)),
+            "h": P(b_ax, div(h, m), None, None),
+        }
+
+    def prefixed(tree, n_extra):
+        return jax.tree.map(lambda s: P(*([None] * n_extra + list(s))), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    stacks = []
+    for spec in model.program:
+        if spec.kind == "zamba_group":
+            stacks.append({
+                "mamba": prefixed(mamba_spec(), 2),
+                "attn": prefixed(attn_spec(), 1),
+            })
+        elif spec.kind in ("mamba1", "mamba2"):
+            stacks.append(prefixed(mamba_spec(), 1))
+        else:
+            stacks.append(prefixed(attn_spec(), 1))
+    return {"pos": P(), "stacks": stacks}
+
+
+def batch_pspecs(batch_shapes, mesh):
+    batch_axes, _ = axis_names(mesh)
+    return jax.tree.map(lambda s: P(*([batch_axes] + [None] * (len(s.shape) - 1))),
+                        batch_shapes)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def build_train_step(model, optimizer, mesh: Mesh, *, zero1: bool = False,
+                     fsdp: bool = False, accum_steps: int = 1,
+                     batch_shapes=None):
+    """Returns (jitted step, shardings dict). step(params, opt, batch) ->
+    (params, opt, loss, metrics)."""
+    param_sh, pspecs, act_rules = make_shardings(model, mesh, fsdp=fsdp)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    if (zero1 or fsdp) and "data" in mesh.axis_names:
+        moment_pspecs = R.zero1_specs(pspecs, params_shape, mesh,
+                                      data_axis="data")
+    else:
+        moment_pspecs = pspecs
+    opt_sh = {
+        "m": _named(mesh, moment_pspecs),
+        "v": _named(mesh, moment_pspecs),
+        "step": NamedSharding(mesh, P()),
+    }
+
+    def loss_fn(params, batch):
+        with use_rules(act_rules):
+            return model.loss(params, batch)
+
+    def step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                return (jax.tree.map(jnp.add, gacc, g), lacc + l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            metrics = {"ce": loss, "moe_lb": 0.0, "moe_z": 0.0}
+        params, opt_state, opt_metrics = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, **opt_metrics)
+        return params, opt_state, loss, metrics
+
+    if batch_shapes is None:
+        batch_sh = None
+        jit_step = jax.jit(step, donate_argnums=(0, 1))
+    else:
+        batch_sh = _named(mesh, batch_pspecs(batch_shapes, mesh))
+        jit_step = jax.jit(
+            step,
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, NamedSharding(mesh, P()), None),
+            donate_argnums=(0, 1),
+        )
+    return jit_step, {"params": param_sh, "opt": opt_sh, "batch": batch_sh,
+                      "pspecs": pspecs, "rules": act_rules}
+
+
+def build_prefill_step(model, mesh: Mesh, *, batch: int, max_len: int,
+                       batch_shapes=None, fsdp: bool = False):
+    param_sh, pspecs, act_rules = make_shardings(model, mesh, fsdp=fsdp)
+    c_pspecs = cache_pspecs(model, mesh, batch, max_len, kind="prefill")
+    cache_sh = _named(mesh, c_pspecs)
+
+    def prefill(params, batch_):
+        with use_rules(act_rules):
+            return model.prefill(params, batch_["tokens"],
+                                 prefix_embeddings=batch_.get("prefix_embeddings"),
+                                 max_len=max_len)
+
+    if batch_shapes is None:
+        jit_fn = jax.jit(prefill)
+        batch_sh = None
+    else:
+        batch_sh = _named(mesh, batch_pspecs(batch_shapes, mesh))
+        jit_fn = jax.jit(prefill, in_shardings=(param_sh, batch_sh),
+                         out_shardings=(None, cache_sh))
+    return jit_fn, {"params": param_sh, "batch": batch_sh, "cache": cache_sh,
+                    "pspecs": pspecs, "rules": act_rules}
+
+
+def build_serve_step(model, mesh: Mesh, *, batch: int, max_len: int):
+    """One-token decode step over a sharded cache."""
+    param_sh, pspecs, act_rules = make_shardings(model, mesh)
+    c_pspecs = cache_pspecs(model, mesh, batch, max_len)
+    cache_sh = _named(mesh, c_pspecs)
+    batch_axes, _ = axis_names(mesh)
+    bsize = math.prod(mesh.shape[a] for a in batch_axes)
+    tok_sh = NamedSharding(mesh, P(batch_axes if batch % bsize == 0 else None,
+                                   None))
+
+    def serve(params, cache, tokens):
+        with use_rules(act_rules):
+            return model.decode_step(params, tokens, cache)
+
+    jit_fn = jax.jit(serve, in_shardings=(param_sh, cache_sh, tok_sh),
+                     out_shardings=(None, cache_sh), donate_argnums=(1,))
+    return jit_fn, {"params": param_sh, "cache": cache_sh, "tokens": tok_sh,
+                    "cache_pspecs": c_pspecs, "pspecs": pspecs,
+                    "rules": act_rules}

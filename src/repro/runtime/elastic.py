@@ -1,0 +1,35 @@
+"""Elastic scaling: recompute the mesh for the surviving device set and
+reshard live state (params/opt) or a checkpoint onto it.
+
+Policy: keep the model axis (TP must match weight partitioning divisors) and
+shrink/grow the data axis to the largest size that fits the surviving
+devices — DP degree is the elastic dimension, which is how production
+systems (and our launcher) handle slice loss without re-tuning layouts.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+__all__ = ["choose_mesh_shape", "reshard"]
+
+
+def choose_mesh_shape(n_devices: int, *, model: int = 16,
+                      pod: int | None = None) -> tuple:
+    """Largest (pod?, data, model) grid with fixed model axis."""
+    assert n_devices >= model, (n_devices, model)
+    if pod:
+        data = n_devices // (pod * model)
+        assert data >= 1
+        return (pod, data, model)
+    data = n_devices // model
+    return (data, model)
+
+
+def reshard(tree, specs, new_mesh: Mesh):
+    """Place every leaf of ``tree`` onto ``new_mesh`` under ``specs``."""
+    def place(leaf, spec):
+        return jax.device_put(leaf, NamedSharding(new_mesh, spec))
+    return jax.tree.map(place, tree, specs,
+                        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))

@@ -1,0 +1,269 @@
+"""Core kernel-language tests: the paper's portability claim as a test matrix.
+
+Every kernel source must produce identical results on all three backend
+expansions (jnp / loops / pallas-interpret) — the OCCA OpenMP/OpenCL/CUDA
+equivalence, reproduced as property-based tests.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BACKENDS, Device, Spec, Tile
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# kernels under test
+# ---------------------------------------------------------------------------
+
+def saxpy_builder(D):
+    def body(ctx, x, y, out):
+        out[...] = D.alpha * x[...] + y[...]
+
+    return Spec(
+        "saxpy", grid=(D.n // D.bn,),
+        inputs=[Tile("x", (D.n,), D.dtype, block=(D.bn,)),
+                Tile("y", (D.n,), D.dtype, block=(D.bn,))],
+        outputs=[Tile("out", (D.n,), D.dtype, block=(D.bn,))],
+        body=body)
+
+
+def stencil_builder(D):
+    def body(ctx, u, out):
+        bi = ctx.outer_id(0)
+        full = ctx.cache(u)                     # occaShared manual cache
+        lap = -2.0 * full + jnp.roll(full, 1, 0) + jnp.roll(full, -1, 0)
+        ctx.barrier()                           # no-op by construction
+        out[...] = jax.lax.dynamic_slice_in_dim(lap, bi * D.bn, D.bn, 0)
+
+    return Spec(
+        "stencil", grid=(D.n // D.bn,),
+        inputs=[Tile("u", (D.n,), jnp.float32)],
+        outputs=[Tile("out", (D.n,), jnp.float32, block=(D.bn,))],
+        body=body)
+
+
+def blockmm_builder(D):
+    def body(ctx, a, b, c):
+        c[...] = jnp.dot(a[...], b[...], preferred_element_type=jnp.float32)
+
+    M, K, N, bm, bn = D.M, D.K, D.N, D.bm, D.bn
+    return Spec(
+        "blockmm", grid=(M // bm, N // bn),
+        inputs=[Tile("a", (M, K), jnp.float32, block=(bm, K), index=lambda i, j: (i, 0)),
+                Tile("b", (K, N), jnp.float32, block=(K, bn), index=lambda i, j: (0, j))],
+        outputs=[Tile("c", (M, N), jnp.float32, block=(bm, bn))],
+        body=body)
+
+
+def reduce_builder(D):
+    """Per-block sum reduction: non-trivial out index map (grid 1D, out 2D)."""
+
+    def body(ctx, x, out):
+        out[...] = jnp.sum(x[...], keepdims=True)
+
+    return Spec(
+        "reduce", grid=(D.n // D.bn,),
+        inputs=[Tile("x", (D.n,), jnp.float32, block=(D.bn,))],
+        outputs=[Tile("out", (D.n // D.bn,), jnp.float32, block=(1,))],
+        body=body)
+
+
+def lanes_builder(D):
+    """Uses lane ids (occaInnerId analogue) + backend flag (occaCPU/GPU)."""
+
+    def body(ctx, x, out):
+        lanes = ctx.lane_ids(D.bn)
+        bi = ctx.outer_id(0)
+        gid = bi * D.bn + lanes                 # occaGlobalId
+        val = x[...] + gid.astype(jnp.float32)
+        # platform-dependent path must NOT change results, only codegen:
+        if ctx.is_pallas:
+            out[...] = val
+        else:
+            out[...] = val * 1.0
+
+    return Spec(
+        "lanes", grid=(D.n // D.bn,),
+        inputs=[Tile("x", (D.n,), jnp.float32, block=(D.bn,))],
+        outputs=[Tile("out", (D.n,), jnp.float32, block=(D.bn,))],
+        body=body)
+
+
+def run_all_backends(builder, defines, arrays):
+    outs = {}
+    for be in BACKENDS:
+        dev = Device(be)
+        k = dev.build_kernel(builder, defines)
+        outs[be] = [np.asarray(o) for o in k.run(*[jnp.asarray(a) for a in arrays])]
+    return outs
+
+
+def assert_backends_agree(outs, rtol=1e-5, atol=1e-5):
+    ref = outs["jnp"]
+    for be, got in outs.items():
+        for r, g in zip(ref, got):
+            np.testing.assert_allclose(g, r, rtol=rtol, atol=atol,
+                                       err_msg=f"backend {be} diverged")
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    nblocks=st.integers(1, 6),
+    bn=st.sampled_from([4, 8, 16]),
+    alpha=st.floats(-4, 4, allow_nan=False, width=32),
+    dtype=st.sampled_from(["float32", "int32"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_saxpy_backend_equivalence(nblocks, bn, alpha, dtype, seed):
+    n = nblocks * bn
+    rng = np.random.RandomState(seed)
+    if dtype == "int32":
+        x = rng.randint(-100, 100, n).astype(np.int32)
+        y = rng.randint(-100, 100, n).astype(np.int32)
+        alpha = int(alpha)
+    else:
+        x = rng.randn(n).astype(np.float32)
+        y = rng.randn(n).astype(np.float32)
+    outs = run_all_backends(saxpy_builder, dict(n=n, bn=bn, alpha=alpha, dtype=dtype), [x, y])
+    assert_backends_agree(outs)
+    np.testing.assert_allclose(outs["jnp"][0], (alpha * x + y).astype(dtype), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(nblocks=st.integers(1, 5), bn=st.sampled_from([4, 8]), seed=st.integers(0, 999))
+def test_stencil_backend_equivalence(nblocks, bn, seed):
+    n = nblocks * bn
+    u = np.random.RandomState(seed).randn(n).astype(np.float32)
+    outs = run_all_backends(stencil_builder, dict(n=n, bn=bn), [u])
+    assert_backends_agree(outs)
+    ref = -2 * u + np.roll(u, 1) + np.roll(u, -1)
+    np.testing.assert_allclose(outs["jnp"][0], ref, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    mi=st.integers(1, 3), ni=st.integers(1, 3), k=st.sampled_from([8, 24]),
+    bm=st.sampled_from([8, 16]), bn=st.sampled_from([8, 16]),
+    seed=st.integers(0, 999),
+)
+def test_blockmm_backend_equivalence(mi, ni, k, bm, bn, seed):
+    M, N = mi * bm, ni * bn
+    rng = np.random.RandomState(seed)
+    a = rng.randn(M, k).astype(np.float32)
+    b = rng.randn(k, N).astype(np.float32)
+    outs = run_all_backends(blockmm_builder, dict(M=M, K=k, N=N, bm=bm, bn=bn), [a, b])
+    assert_backends_agree(outs, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(outs["jnp"][0], a @ b, rtol=1e-3, atol=1e-3)
+
+
+def test_reduce_noncanonical_index():
+    n, bn = 64, 8
+    x = np.random.RandomState(7).randn(n).astype(np.float32)
+    outs = run_all_backends(reduce_builder, dict(n=n, bn=bn), [x])
+    assert_backends_agree(outs)
+    np.testing.assert_allclose(outs["jnp"][0], x.reshape(-1, bn).sum(1), rtol=1e-5, atol=1e-5)
+
+
+def test_lane_ids_and_platform_flags():
+    n, bn = 32, 8
+    x = np.random.RandomState(9).randn(n).astype(np.float32)
+    outs = run_all_backends(lanes_builder, dict(n=n, bn=bn), [x])
+    assert_backends_agree(outs)
+    np.testing.assert_allclose(outs["jnp"][0], x + np.arange(n), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# host API behaviour (paper §2)
+# ---------------------------------------------------------------------------
+
+def test_build_cache_and_defines_specialization():
+    dev = Device("jnp")
+    k1 = dev.build_kernel(saxpy_builder, dict(n=32, bn=8, alpha=2.0, dtype="float32"))
+    k2 = dev.build_kernel(saxpy_builder, dict(n=32, bn=8, alpha=2.0, dtype="float32"))
+    k3 = dev.build_kernel(saxpy_builder, dict(n=32, bn=8, alpha=3.0, dtype="float32"))
+    assert k1 is k2, "identical defines must hit the kernel cache"
+    assert k3 is not k1, "different defines must rebuild (runtime specialization)"
+    assert dev.stats.builds == 2 and dev.stats.cache_hits == 1
+    x = np.ones(32, np.float32)
+    np.testing.assert_allclose(np.asarray(k1.run(x, x)[0]), 3.0 * x)
+    np.testing.assert_allclose(np.asarray(k3.run(x, x)[0]), 4.0 * x)
+
+
+def test_memory_swap_and_host_roundtrip():
+    dev = Device("jnp")
+    a = dev.malloc(np.arange(4, dtype=np.float32))
+    b = dev.malloc(np.zeros(4, np.float32))
+    a.swap(b)
+    assert a.to_host().sum() == 0 and b.to_host().sum() == 6
+    b.from_host(np.full(4, 2.0, np.float32))
+    np.testing.assert_allclose(b.to_host(), 2.0)
+    with pytest.raises(ValueError):
+        b.from_host(np.zeros(5, np.float32))
+
+
+def test_kernel_call_rebinds_output_memory():
+    dev = Device("loops")
+    k = dev.build_kernel(saxpy_builder, dict(n=16, bn=8, alpha=1.0, dtype="float32"))
+    x = dev.malloc(np.ones(16, np.float32))
+    y = dev.malloc(np.ones(16, np.float32))
+    out = dev.malloc(np.zeros(16, np.float32))
+    k(x, y, out)
+    np.testing.assert_allclose(out.to_host(), 2.0)
+
+
+def test_output_block_coverage_validation():
+    def bad_builder(D):
+        def body(ctx, x, y):
+            y[...] = x[...]
+        # grid of 4 cells all mapping to out block 0 -> must be rejected
+        return Spec("bad", grid=(4,),
+                    inputs=[Tile("x", (16,), jnp.float32, block=(4,))],
+                    outputs=[Tile("y", (16,), jnp.float32, block=(4,),
+                                  index=lambda i: (0,))],
+                    body=body)
+
+    with pytest.raises(ValueError, match="visited more than once"):
+        Device("jnp").build_kernel(bad_builder, {})
+
+
+def test_nondivisible_block_rejected():
+    def bad(D):
+        def body(ctx, x, y):
+            y[...] = x[...]
+        return Spec("bad2", grid=(3,),
+                    inputs=[Tile("x", (16,), jnp.float32, block=(5,))],
+                    outputs=[Tile("y", (16,), jnp.float32, block=(5,))],
+                    body=body)
+
+    with pytest.raises(ValueError, match="does not divide"):
+        Device("jnp").build_kernel(bad, {})
+
+
+# ---------------------------------------------------------------------------
+# autotuning (the paper's setThreadArray tuning loop)
+# ---------------------------------------------------------------------------
+
+def test_autotune_picks_valid_block_and_preserves_results():
+    from repro.core import autotune
+
+    dev = Device("jnp")
+    x = np.random.RandomState(0).randn(256).astype(np.float32)
+    y = np.random.RandomState(1).randn(256).astype(np.float32)
+    base = dict(n=256, alpha=1.5, dtype="float32")
+    result = autotune(dev, saxpy_builder, base,
+                      sweep={"bn": [7, 16, 64, 256]},   # 7 is invalid (256%7)
+                      args=(x, y), repeats=2)
+    assert result["bn"] in (16, 64, 256)
+    assert len(result.trials) == 3                       # invalid one skipped
+    k = dev.build_kernel(saxpy_builder, dict(result))
+    np.testing.assert_allclose(np.asarray(k.run(x, y)[0]), 1.5 * x + y,
+                               rtol=1e-5)

@@ -1,0 +1,274 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import (decode_attention, decode_ref,
+                                           flash_attention, mha_ref)
+from repro.kernels.rmsnorm import rmsnorm, rmsnorm_ref
+from repro.kernels.ssm_scan import (selective_scan_assoc, selective_scan_ref,
+                                    ssm_scan)
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,hk", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(h, hk, causal, dtype):
+    b, s, d = 2, 128, 64
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(b, h, s, d), dtype)
+    k = jnp.asarray(rng.randn(b, hk, s, d), dtype)
+    v = jnp.asarray(rng.randn(b, hk, s, d), dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=32, block_kv=32)
+    ref = mha_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_sliding_window(window):
+    b, h, s, d = 1, 2, 128, 64
+    rng = np.random.RandomState(1)
+    q, k, v = (jnp.asarray(rng.randn(b, h, s, d), jnp.float32) for _ in range(3))
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=32, block_kv=32)
+    ref = mha_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.sampled_from([64, 128, 192]),
+    d=st.sampled_from([32, 64, 128]),
+    bq=st.sampled_from([32, 64]),
+    seed=st.integers(0, 99),
+)
+def test_flash_attention_shape_sweep(s, d, bq, seed):
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(1, 2, s, d), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, s, d), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, s, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, block_q=bq, block_kv=bq)
+    ref = mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_flash_attention_gradients_match_ref():
+    b, h, s, d = 1, 2, 64, 32
+    rng = np.random.RandomState(2)
+    q, k, v = (jnp.asarray(rng.randn(b, h, s, d), jnp.float32) for _ in range(3))
+
+    def loss_flash(q, k, v):
+        return (flash_attention(q, k, v, block_q=32, block_kv=32) ** 2).sum()
+
+    def loss_ref(q, k, v):
+        return (mha_ref(q, k, v) ** 2).sum()
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_flash_decode_matches_ref():
+    b, h, hk, s, d = 2, 8, 2, 256, 64
+    rng = np.random.RandomState(3)
+    q = jnp.asarray(rng.randn(b, h, 1, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, hk, s, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, hk, s, d), jnp.float32)
+    got = decode_attention(q, k, v, block_kv=64)
+    ref = decode_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_sliding_window():
+    b, h, s, d = 1, 4, 256, 64
+    rng = np.random.RandomState(4)
+    q = jnp.asarray(rng.randn(b, h, 1, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    got = decode_attention(q, k, v, window=32, block_kv=64)
+    ref = decode_ref(q, k, v, window=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_prefill_then_decode_consistency():
+    """decode(q_last, cache) == last row of prefill attention."""
+    b, h, s, d = 1, 2, 128, 32
+    rng = np.random.RandomState(5)
+    q = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    full = flash_attention(q, k, v, causal=True, block_q=32, block_kv=32)
+    dec = decode_attention(q[:, :, -1:], k, v, block_kv=32)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, :, -1:]),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+def _ssm_inputs(bt, L, dm, n, seed=0):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(bt, L, dm), jnp.float32)
+    delta = jnp.asarray(np.log1p(np.exp(rng.randn(bt, L, dm))), jnp.float32) * 0.1
+    A = -jnp.asarray(np.abs(rng.randn(dm, n)) + 0.1, jnp.float32)
+    B = jnp.asarray(rng.randn(bt, L, n), jnp.float32)
+    C = jnp.asarray(rng.randn(bt, L, n), jnp.float32)
+    D = jnp.asarray(rng.randn(dm), jnp.float32)
+    return x, delta, A, B, C, D
+
+
+@settings(**SETTINGS)
+@given(
+    L=st.sampled_from([32, 64, 128]),
+    dm=st.sampled_from([16, 64]),
+    n=st.sampled_from([4, 16]),
+    seed=st.integers(0, 99),
+)
+def test_ssm_scan_pallas_matches_sequential_ref(L, dm, n, seed):
+    args = _ssm_inputs(1, L, dm, n, seed)
+    got = ssm_scan(*args)
+    ref, _ = selective_scan_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_assoc_scan_matches_sequential():
+    args = _ssm_inputs(2, 96, 32, 8, 7)
+    y1, h1 = selective_scan_ref(*args)
+    y2, h2 = selective_scan_assoc(*args)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_scan_state_carry_chunked():
+    """Chunked kernel must equal one long scan (state carries across chunks)."""
+    args = _ssm_inputs(1, 128, 16, 4, 11)
+    y, hT = __import__("repro.kernels.ssm_scan.kernel", fromlist=["k"]).ssm_scan_pallas(
+        *args, chunk=16)
+    ref_y, ref_h = selective_scan_ref(*args)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref_y), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(ref_h), rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_scan_gradients():
+    args = _ssm_inputs(1, 32, 8, 4, 13)
+
+    def loss_k(*a):
+        return (ssm_scan(*a) ** 2).sum()
+
+    def loss_r(*a):
+        return (selective_scan_ref(*a)[0] ** 2).sum()
+
+    g1 = jax.grad(loss_k, argnums=tuple(range(6)))(*args)
+    g2 = jax.grad(loss_r, argnums=tuple(range(6)))(*args)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([4, 64, 300]),
+    d=st.sampled_from([64, 256, 1024]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 99),
+)
+def test_rmsnorm_matches_ref(rows, d, dtype, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(rows, d), jnp.dtype(dtype))
+    w = jnp.asarray(rng.randn(d), jnp.float32)
+    got = rmsnorm(x, w)
+    ref = rmsnorm_ref(x, w)
+    tol = _tol(jnp.bfloat16 if dtype == "bfloat16" else jnp.float32)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), **tol)
+
+
+def test_rmsnorm_3d_and_grad():
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(2, 8, 128), jnp.float32)
+    w = jnp.asarray(rng.randn(128), jnp.float32)
+    np.testing.assert_allclose(np.asarray(rmsnorm(x, w)),
+                               np.asarray(rmsnorm_ref(x, w)), rtol=1e-5, atol=1e-5)
+    g1 = jax.grad(lambda x_: rmsnorm(x_, w).sum())(x)
+    g2 = jax.grad(lambda x_: rmsnorm_ref(x_, w).sum())(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash BACKWARD Pallas kernel (dq/dk/dv from lse stats, no O(S^2) residuals)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("h,hk,d,dv,causal,window,prefix", [
+    (4, 4, 64, 64, True, None, 0),
+    (4, 2, 64, 64, True, None, 0),        # GQA group reduction
+    (8, 1, 32, 32, True, None, 0),        # MQA
+    (2, 2, 64, 64, True, 32, 0),          # sliding window
+    (2, 2, 64, 64, False, None, 0),       # non-causal
+    (2, 2, 64, 64, True, None, 48),       # prefix-LM
+    (4, 4, 192, 128, True, None, 0),      # MLA dims (dqk != dv)
+])
+def test_flash_bwd_kernel_matches_oracle(h, hk, d, dv, causal, window, prefix):
+    b, s = 2, 128
+    rng = np.random.RandomState(42)
+    q = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, hk, s, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, hk, s, dv), jnp.float32)
+
+    def loss_k(q, k, v):
+        return (flash_attention(q, k, v, causal=causal, window=window,
+                                prefix_len=prefix, block_q=32,
+                                block_kv=32) ** 2).sum()
+
+    def loss_r(q, k, v):
+        return (mha_ref(q, k, v, causal=causal, window=window,
+                        prefix_len=prefix) ** 2).sum()
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for name, a, b_ in zip("qkv", gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=2e-3, atol=2e-3,
+                                   err_msg=f"d{name} mismatch")
+
+
+def test_flash_fwd_lse_stats():
+    from repro.kernels.flash_attention.kernel import flash_attention_fwd
+    b, h, s, d = 1, 2, 64, 32
+    rng = np.random.RandomState(3)
+    q = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
+    _, lse = flash_attention_fwd(q, k, v, causal=True, block_q=32, block_kv=32)
+    # reference lse
+    s_ = np.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(d)
+    mask = np.tril(np.ones((s, s), bool))
+    s_ = np.where(mask, s_, -np.inf)
+    ref = np.log(np.exp(s_ - s_.max(-1, keepdims=True)).sum(-1)) + s_.max(-1)
+    np.testing.assert_allclose(np.asarray(lse), ref, rtol=1e-4, atol=1e-4)
