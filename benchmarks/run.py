@@ -1,13 +1,14 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. FD = paper Fig. 2; SEM = Figs. 3-4;
-DG = Figs. 5-6; attention/ssm = LM kernel hot-spots; roofline rows summarize
+DG = Figs. 5-6; attention/ssm = LM kernel hot-spots; unified = matmul/rmsnorm
+in the unified kernel language on all three backends; roofline rows summarize
 the dry-run artifacts when present (full table via ``-m benchmarks.roofline``).
 """
 
 from __future__ import annotations
 
-from . import attention, dg, fd, sem
+from . import attention, dg, fd, sem, unified
 from .common import Row, emit
 
 
@@ -32,6 +33,7 @@ def main() -> None:
     sem.run(rows)
     dg.run(rows)
     attention.run(rows)
+    unified.run(rows)
     try:
         _roofline_rows(rows)
     except Exception as e:  # artifacts may not exist yet

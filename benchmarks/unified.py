@@ -1,0 +1,40 @@
+"""Unified-language kernel rows: matmul (reduce axis) + rmsnorm on all three
+backend expansions. The pallas-vs-oracle ratio is the paper's portability
+pitch made measurable: one source, per-backend performance."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import BACKENDS
+from repro.kernels.matmul import matmul
+from repro.kernels.rmsnorm.kernel import rmsnorm_unified
+
+from .common import Row, time_fn
+
+__all__ = ["run"]
+
+
+def run(rows):
+    rng = np.random.RandomState(0)
+
+    m = k = n = 256
+    a = rng.randn(m, k).astype(np.float32)
+    b = rng.randn(k, n).astype(np.float32)
+    for backend in BACKENDS:
+        sec = time_fn(lambda a_, b_, be=backend: matmul(
+            a_, b_, block_m=64, block_n=64, block_k=64, backend=be), a, b)
+        rows.append(Row(f"unified/matmul/{backend}", sec,
+                        f"M=K=N={m} bm=bn=bk=64 "
+                        f"gflops={2 * m * k * n / sec / 1e9:.1f}"))
+
+    r, d = 2048, 1024
+    x = rng.randn(r, d).astype(np.float32)
+    w = rng.randn(d).astype(np.float32)
+    for backend in BACKENDS:
+        sec = time_fn(lambda x_, w_, be=backend: rmsnorm_unified(
+            x_, w_, block_rows=256, backend=be), x, w)
+        rows.append(Row(f"unified/rmsnorm/{backend}", sec,
+                        f"rows={r} d={d} block_rows=256 "
+                        f"gbps={3 * x.nbytes / sec / 1e9:.1f}"))
+    return rows

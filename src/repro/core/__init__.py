@@ -5,8 +5,8 @@ One kernel source expands at run time to three backends (``jnp``, ``loops``,
 adapted to JAX/TPU. See DESIGN.md §2 for the keyword-by-keyword mapping.
 """
 
-from .lang import BACKENDS, Ctx, Spec, Tile, TileRef, cdiv, expand
-from .device import Device, BuildStats
+from .lang import BACKENDS, Ctx, Scratch, Spec, Tile, TileRef, cdiv, expand
+from .device import Device, BuildStats, default_device, fit_block
 from .kernel import Kernel
 from .memory import Memory
 from .tune import TuneResult, autotune
@@ -18,11 +18,14 @@ __all__ = [
     "Device",
     "Kernel",
     "Memory",
+    "Scratch",
     "Spec",
     "Tile",
     "TileRef",
     "TuneResult",
     "autotune",
     "cdiv",
+    "default_device",
     "expand",
+    "fit_block",
 ]

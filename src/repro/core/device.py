@@ -5,13 +5,17 @@ container it transparently selects ``interpret=True`` (the kernel *language*
 is identical — that is the portability contract). ``build_kernel`` performs
 the paper's run-time compilation: the builder is invoked with the injected
 ``defines`` (addDefine analogue), expanded for the device's backend, jitted,
-and cached keyed by (builder, defines, backend) — OCCA's kernel cache.
+and cached keyed by (builder *identity*, defines, backend) — OCCA's kernel
+cache. Identity matters: two closures produced by the same factory share a
+``__qualname__`` but are different kernels, so the cache is keyed on the
+function object itself (weakly, where possible) rather than its name.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
+import weakref
 from typing import Callable
 
 import jax
@@ -20,7 +24,7 @@ from . import lang
 from .kernel import Kernel
 from .memory import Memory
 
-__all__ = ["Device", "BuildStats"]
+__all__ = ["Device", "BuildStats", "default_device", "fit_block"]
 
 
 @dataclasses.dataclass
@@ -49,7 +53,14 @@ class Device:
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         self.interpret = bool(interpret)
+        # id(builder anchor) -> (ref-or-strong-anchor, {key: Kernel}). Keyed by
+        # object IDENTITY (never __eq__/__hash__: two equal-but-distinct
+        # instances must not share kernels). Weakly-referenced anchors are
+        # evicted by a finalizer so caching never pins short-lived closures;
+        # non-weakrefable anchors are held strongly (keeping the id valid)
+        # with bounded FIFO eviction.
         self._cache: dict = {}
+        self._strong_keys: list = []
         self._lock = threading.Lock()
         self.stats = BuildStats()
 
@@ -61,20 +72,63 @@ class Device:
             shape = (array_or_shape,) if isinstance(array_or_shape, int) else tuple(array_or_shape)
             array = jnp.zeros(shape, dtype or jnp.float32)
         else:
-            array = jnp.asarray(array_or_shape)
+            array = jnp.asarray(array_or_shape, dtype)  # dtype=None keeps as-is
         return Memory(self, array)
+
+    _STRONG_CACHE_MAX = 64
+
+    @staticmethod
+    def _evict_entry(cache, key, ref):
+        ent = cache.get(key)
+        if ent is not None and ent[0] is ref:  # don't drop a reused-id entry
+            cache.pop(key, None)
+
+    def _builder_cache(self, builder) -> dict:
+        """Per-builder kernel sub-cache, keyed on object identity.
+
+        Bound methods are a fresh object per attribute access, so they are
+        unwrapped and anchored on the *instance* (with the underlying function
+        in the subkey) — ``dev.build_kernel(obj.builder, ...)`` in a loop hits
+        the cache. Plain closures recreated per call inherently cannot: hold
+        onto the builder object to reuse its cache."""
+        anchor, fn = builder, None
+        if getattr(builder, "__func__", None) is not None \
+                and getattr(builder, "__self__", None) is not None:
+            anchor, fn = builder.__self__, builder.__func__
+        key = id(anchor)
+        ent = self._cache.get(key)
+        if ent is not None:
+            ref, sub = ent
+            live = ref() if isinstance(ref, weakref.ref) else ref
+            if live is not anchor:  # stale id reuse: rebuild the entry
+                ent = None
+        if ent is None:
+            sub = {}
+            try:
+                ref = weakref.ref(anchor)
+                self._cache[key] = (ref, sub)
+                weakref.finalize(anchor, self._evict_entry, self._cache, key, ref)
+            except TypeError:  # anchor not weakref-able: hold it strongly
+                self._cache[key] = (anchor, sub)
+                self._strong_keys.append(key)
+                while len(self._strong_keys) > self._STRONG_CACHE_MAX:
+                    # bounded: evict oldest so strong refs can't pile up forever
+                    self._cache.pop(self._strong_keys.pop(0), None)
+        if fn is None:
+            return sub
+        per_fn = sub.get(fn)
+        if per_fn is None:
+            per_fn = sub[fn] = {}
+        return per_fn
 
     # -- run-time kernel compilation -------------------------------------------
     def build_kernel(self, builder: Callable, defines: dict | None = None) -> Kernel:
         defines = dict(defines or {})
-        key = (
-            getattr(builder, "__module__", "?") + "." + getattr(builder, "__qualname__", repr(builder)),
-            _freeze(defines),
-            self.backend,
-            self.interpret,
-        )
+        # backend/interpret are set in __init__ but are public attributes: keep
+        # them in the key so mutating them can't serve stale kernels.
+        key = (_freeze(defines), self.backend, self.interpret)
         with self._lock:
-            hit = self._cache.get(key)
+            hit = self._builder_cache(builder).get(key)
             if hit is not None:
                 self.stats.cache_hits += 1
                 return hit
@@ -87,7 +141,7 @@ class Device:
         kern = Kernel(self, spec, jax.jit(fn), defines)
 
         with self._lock:
-            self._cache[key] = kern
+            self._builder_cache(builder)[key] = kern
             self.stats.builds += 1
         return kern
 
@@ -98,3 +152,31 @@ class Device:
 
     def __repr__(self):
         return f"Device(backend={self.backend!r}, interpret={self.interpret})"
+
+
+_DEFAULT_DEVICES: dict = {}
+_DEFAULT_DEVICES_LOCK = threading.Lock()
+
+
+def default_device(backend: str, interpret: bool | None = None) -> Device:
+    """Process-wide Device per (backend, interpret), so ops that build kernels
+    on the fly (matmul, rmsnorm, …) share one kernel cache instead of one per
+    module. ``interpret=None`` lets the Device pick (interpret off-TPU)."""
+    with _DEFAULT_DEVICES_LOCK:
+        key = (backend, interpret)
+        dev = _DEFAULT_DEVICES.get(key)
+        if dev is None:
+            dev = _DEFAULT_DEVICES[key] = Device(backend, interpret=interpret)
+        return dev
+
+
+def fit_block(block: int, n: int) -> int:
+    """Largest divisor of ``n`` that is <= ``block`` (blocks must tile exactly)."""
+    if n <= 0:
+        raise ValueError(f"fit_block: cannot tile a dimension of size {n}")
+    if block <= 0:
+        raise ValueError(f"fit_block: block must be positive, got {block}")
+    block = min(int(block), int(n))
+    while n % block:
+        block -= 1
+    return block

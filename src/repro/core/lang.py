@@ -13,6 +13,14 @@ Keyword mapping (paper appendix tables → this module):
   occaOuterFor / occaOuterId   grid / ``ctx.outer_id(d)``
   occaInnerFor / occaInnerId   vector lanes of the tile / ``ctx.lane_ids(n)``
   occaShared (+ manual cache)  ``ctx.cache(ref)`` — tile load into VMEM
+  occaShared (accumulators)    ``ctx.scratch`` — VMEM scratch declared via
+                               ``Spec(scratch=[Scratch(shape, dtype)])``; the
+                               refs persist across sequential reduce steps
+  sequential inner loop        reduce axes — ``Spec(reduce_axes=...)`` marks
+                               trailing grid axes as *sequential*: blocks
+                               mapped to the same output index along those
+                               axes are visited in order (occa's "outer loop
+                               over work-groups, inner loop carrying state")
   occaBarrier(...)             ``ctx.barrier()`` — a no-op: a TPU block executes
                                as ONE sequenced program, which is exactly the
                                paper's OpenMP "inner loops run serially" model
@@ -21,9 +29,22 @@ Keyword mapping (paper appendix tables → this module):
   occaKernelInfoArg            the ``ctx`` argument itself
   addDefine / buildKernel      ``Device.build_kernel(builder, defines=...)``
 
-Restrictions (asserted): block shapes must divide the full array shape, and
-every output block is visited exactly once (no grid-carried accumulation —
-hand-written Pallas kernels in ``repro.kernels`` cover that pattern).
+Reduction protocol (mirrors ``kernels/flash_attention``'s hand-rolled m/l/acc
+pattern): reduce axes must be the *trailing* grid axes (innermost = sequential
+on TPU). Scratch contents are undefined before the first reduce step — bodies
+initialize under ``ctx.when(ctx.is_first)``, accumulate every step, and flush
+outputs under ``ctx.when(ctx.is_last)`` (unconditional output writes are also
+fine: the last visit wins on every backend). Output refs keep their contents
+across the reduce visits of a block, so scratch-free accumulation directly
+into an output block works too — but like scratch, an output block's
+first-visit contents are undefined on a real TPU (zero-filled only on the
+jnp/loops/interpret expansions), so read-modify-write bodies must initialize
+the block under ``ctx.when(ctx.is_first)`` as well.
+
+Restrictions (asserted): block shapes must divide the full array shape; output
+index maps must not depend on reduce-axis ids; and every output block is
+visited exactly once per reduce iteration-space (exactly once overall when the
+kernel has no reduce axes).
 """
 
 from __future__ import annotations
@@ -38,9 +59,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "Tile",
+    "Scratch",
     "Spec",
     "Ctx",
     "TileRef",
@@ -103,15 +126,36 @@ class Tile:
         return lambda *gids: gids
 
 
+@dataclasses.dataclass(frozen=True)
+class Scratch:
+    """A VMEM scratch buffer (occaShared accumulator analogue).
+
+    Scratch refs are handed to the body via ``ctx.scratch`` and persist across
+    the sequential visits of a reduce iteration-space (Pallas: real
+    ``pltpu.VMEM`` scratch; jnp/loops: carried accumulators)."""
+
+    shape: tuple[int, ...]
+    dtype: object = jnp.float32
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
+
+
 @dataclasses.dataclass
 class Spec:
-    """A built kernel: grid + tiles + body. Produced by a builder(D) call."""
+    """A built kernel: grid + tiles + body. Produced by a builder(D) call.
+
+    ``reduce_axes`` marks trailing grid axes as sequential reduction axes;
+    ``scratch`` declares VMEM accumulators that persist across the reduce
+    steps (see module docstring for the protocol)."""
 
     name: str
     grid: tuple[int, ...]
     inputs: list[Tile]
     outputs: list[Tile]
     body: Callable
+    reduce_axes: tuple[int, ...] = ()
+    scratch: list[Scratch] = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
         self.grid = tuple(int(g) for g in self.grid)
@@ -120,24 +164,72 @@ class Spec:
         names = [t.name for t in self.inputs + self.outputs]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tile names in kernel {self.name!r}")
-        # Every output block must be visited exactly once.
+
+        self.reduce_axes = tuple(sorted(int(a) for a in self.reduce_axes))
+        if len(set(self.reduce_axes)) != len(self.reduce_axes):
+            raise ValueError(f"duplicate reduce axes {self.reduce_axes}")
+        k = len(self.grid) - len(self.reduce_axes)
+        if self.reduce_axes and self.reduce_axes != tuple(range(k, len(self.grid))):
+            raise ValueError(
+                f"reduce_axes {self.reduce_axes} must be the trailing grid axes "
+                f"(grid rank {len(self.grid)}): sequential axes are innermost on TPU")
+        self.scratch = list(self.scratch)
+        for s in self.scratch:
+            if not isinstance(s, Scratch):
+                raise TypeError(f"scratch entries must be lang.Scratch, got {type(s)}")
+
+        # Surface non-dividing blocks at build time for ALL tiles — autotune
+        # relies on invalid candidates failing inside build_kernel, not at the
+        # first (jitted) run.
+        for t in self.inputs:
+            t.resolved_block()
+
+        # Every output block must be visited exactly once per reduce
+        # iteration-space (exactly once overall for non-reduce kernels), and
+        # output index maps must not depend on the reduce ids (the language's
+        # accumulate-then-flush contract needs a stable destination).
         for t in self.outputs:
             blk = t.resolved_block()
             idx = t.resolved_index(self.grid)
-            seen = set()
+            seen: dict[tuple, tuple] = {}
+            visited: set[tuple] = set()
             for cell in np.ndindex(*self.grid):
                 bi = tuple(int(i) for i in idx(*cell))
-                if bi in seen:
-                    raise ValueError(
-                        f"output tile {t.name!r} block {bi} visited more than once; "
-                        "grid-carried accumulation is not supported by the language "
-                        "(write a hand-tiled kernel in repro.kernels instead)")
-                seen.add(bi)
+                outer = cell[:k]
+                if outer in seen:
+                    if seen[outer] != bi:
+                        raise ValueError(
+                            f"output tile {t.name!r}: index map depends on reduce "
+                            f"axes (cell {cell} -> {bi}, expected {seen[outer]}); "
+                            "reduce steps must accumulate into one block")
+                else:
+                    if bi in visited:
+                        raise ValueError(
+                            f"output tile {t.name!r} block {bi} visited more than once; "
+                            "grid-carried accumulation needs an explicit reduce axis "
+                            "(Spec(reduce_axes=...)) — implicit revisits are rejected")
+                    seen[outer] = bi
+                    visited.add(bi)
             nblocks = math.prod(s // b for s, b in zip(t.shape, blk))
             if len(seen) != nblocks:
                 raise ValueError(
                     f"output tile {t.name!r}: {len(seen)} blocks visited but "
                     f"{nblocks} exist; kernel would leave garbage")
+
+    # -- grid split helpers --------------------------------------------------
+    @property
+    def outer_grid(self) -> tuple[int, ...]:
+        return self.grid[: len(self.grid) - len(self.reduce_axes)]
+
+    @property
+    def reduce_grid(self) -> tuple[int, ...]:
+        return tuple(self.grid[a] for a in self.reduce_axes)
+
+    def outer_index(self, t: Tile) -> Callable[..., tuple]:
+        """Output index map over *outer* cells (reduce ids pinned to 0)."""
+        full = t.resolved_index(self.grid)
+        pad = (0,) * len(self.reduce_axes)
+        return lambda *og: full(*og, *pad)
 
 
 class TileRef:
@@ -171,14 +263,20 @@ class TileRef:
 
 
 class Ctx:
-    """occaKernelInfoArg analogue: grid ids/dims, defines, backend flags."""
+    """occaKernelInfoArg analogue: grid ids/dims, defines, backend flags,
+    reduce position and scratch refs."""
 
     def __init__(self, backend: str, defines: SimpleNamespace,
-                 gids: Sequence, grid: tuple[int, ...]):
+                 gids: Sequence, grid: tuple[int, ...], *,
+                 reduce_axes: tuple[int, ...] = (), scratch: Sequence = (),
+                 refs: Sequence = ()):
         self.backend = backend
         self.D = defines
         self._gids = tuple(gids)
         self.grid = grid
+        self._reduce_axes = tuple(reduce_axes)
+        self.scratch = tuple(scratch)
+        self._refs = tuple(refs)
 
     # --- occaOuterId / occaOuterDim ---------------------------------------
     def outer_id(self, d: int):
@@ -186,6 +284,60 @@ class Ctx:
 
     def outer_dim(self, d: int) -> int:
         return self.grid[d]
+
+    # --- reduce (sequential) axes -----------------------------------------
+    def reduce_id(self, d: int = 0):
+        """Position along the d-th reduce axis (0 .. reduce_dim(d) - 1)."""
+        return self._gids[self._reduce_axes[d]]
+
+    def reduce_dim(self, d: int = 0) -> int:
+        return self.grid[self._reduce_axes[d]]
+
+    @property
+    def is_first(self):
+        """True on the first visit of the reduce iteration-space (init point).
+
+        A plain ``True`` for kernels without reduce axes; a traced scalar
+        bool otherwise."""
+        ids = [self._gids[a] for a in self._reduce_axes]
+        if not ids:
+            return True
+        pred = ids[0] == 0
+        for i in ids[1:]:
+            pred = pred & (i == 0)
+        return pred
+
+    @property
+    def is_last(self):
+        """True on the last visit of the reduce iteration-space (flush point)."""
+        if not self._reduce_axes:
+            return True
+        pred = None
+        for a in self._reduce_axes:
+            p = self._gids[a] == self.grid[a] - 1
+            pred = p if pred is None else pred & p
+        return pred
+
+    def when(self, pred):
+        """Run the decorated thunk only when ``pred`` holds (pl.when analogue).
+
+        Under pallas this is ``pl.when``; under jnp/loops the thunk runs
+        unconditionally and every tracked ref write is select-masked on
+        ``pred`` — semantically identical, fully functional."""
+        def deco(fn):
+            if isinstance(pred, (bool, np.bool_)):
+                if pred:
+                    fn()
+                return fn
+            if self.backend == "pallas":
+                pl.when(pred)(fn)
+                return fn
+            before = [r._value for r in self._refs]
+            fn()
+            for r, old in zip(self._refs, before):
+                r._value = jnp.where(pred, r._value, old)
+            return fn
+        return deco
 
     # --- occaInnerId: lanes of the vectorized tile ------------------------
     def lane_ids(self, n: int):
@@ -230,64 +382,90 @@ def _slice_tile(tile: Tile, arr, gids, grid):
     return TileRef(lax.dynamic_slice(arr, starts, blk))
 
 
-def _static_starts(tile: Tile, grid) -> np.ndarray:
-    """Evaluate the index map for every grid cell at trace time."""
+def _static_starts(tile: Tile, grid, index_fn) -> np.ndarray:
+    """Evaluate an index map for every cell of ``grid`` at trace time."""
     blk = tile.resolved_block()
-    idx = tile.resolved_index(grid)
     starts = [
-        [int(i) * b for i, b in zip(idx(*cell), blk)]
+        [int(i) * b for i, b in zip(index_fn(*cell), blk)]
         for cell in np.ndindex(*grid)
     ]
     return np.asarray(starts, dtype=np.int32)
 
 
-def _is_canonical(tile: Tile, grid) -> bool:
-    """True if the index map is the identity over the grid (fast reshape path)."""
+def _is_canonical(tile: Tile, grid, index_fn) -> bool:
+    """True if ``index_fn`` is the identity over ``grid`` (fast reshape path)."""
     blk = tile.resolved_block()
     if len(grid) != len(tile.shape):
         return False
     if any(g * b != s for g, b, s in zip(grid, blk, tile.shape)):
         return False
     for cell in np.ndindex(*grid):
-        if tuple(int(i) for i in tile.resolved_index(grid)(*cell)) != cell:
+        if tuple(int(i) for i in index_fn(*cell)) != cell:
             return False
     return True
 
 
+def _run_body(spec: Spec, backend: str, defines, gids, ins, out_vals, scr_vals):
+    """One grid-cell body invocation on the functional (jnp/loops) backends.
+
+    Returns the updated (output block values, scratch values)."""
+    outs = [TileRef(v) for v in out_vals]
+    scr = [TileRef(v) for v in scr_vals]
+    ctx = Ctx(backend, defines, gids, spec.grid,
+              reduce_axes=spec.reduce_axes, scratch=scr, refs=tuple(outs) + tuple(scr))
+    spec.body(ctx, *ins, *outs)
+    return tuple(o.value for o in outs), tuple(s.value for s in scr)
+
+
 def _expand_jnp(spec: Spec, defines: SimpleNamespace):
     grid = spec.grid
-    ncells = math.prod(grid)
+    outer_grid = spec.outer_grid
+    red_grid = spec.reduce_grid
+    nouter = math.prod(outer_grid) if outer_grid else 1
+    nred = math.prod(red_grid) if red_grid else 1
 
     def fn(*in_arrays):
         def cell(flat_idx):
-            gids = jnp.unravel_index(flat_idx, grid)
-            ins = [_slice_tile(t, a, gids, grid) for t, a in zip(spec.inputs, in_arrays)]
-            outs = [TileRef(jnp.zeros(t.resolved_block(), t.dtype)) for t in spec.outputs]
-            ctx = Ctx("jnp", defines, gids, grid)
-            spec.body(ctx, *ins, *outs)
-            return tuple(o.value for o in outs)
+            ogids = jnp.unravel_index(flat_idx, outer_grid) if outer_grid else ()
+            out0 = tuple(jnp.zeros(t.resolved_block(), t.dtype) for t in spec.outputs)
+            scr0 = tuple(jnp.zeros(s.shape, s.dtype) for s in spec.scratch)
 
-        blocks = jax.vmap(cell)(jnp.arange(ncells))  # tuple of (ncells, *blk)
+            def step(r, carry):
+                out_vals, scr_vals = carry
+                rgids = jnp.unravel_index(r, red_grid) if red_grid else ()
+                gids = tuple(ogids) + tuple(rgids)
+                ins = [_slice_tile(t, a, gids, grid)
+                       for t, a in zip(spec.inputs, in_arrays)]
+                return _run_body(spec, "jnp", defines, gids, ins, out_vals, scr_vals)
+
+            if red_grid:
+                out_vals, _ = lax.fori_loop(0, nred, step, (out0, scr0))
+            else:
+                out_vals, _ = step(0, (out0, scr0))
+            return out_vals
+
+        blocks = jax.vmap(cell)(jnp.arange(nouter))  # tuple of (nouter, *blk)
         results = []
         for t, stack in zip(spec.outputs, blocks):
             blk = t.resolved_block()
-            if _is_canonical(t, grid):
+            oidx = spec.outer_index(t)
+            if _is_canonical(t, outer_grid, oidx):
                 # (g0..gk, b0..bk) -> interleave -> full shape
-                x = stack.reshape(grid + blk)
+                x = stack.reshape(outer_grid + blk)
                 perm = []
-                for d in range(len(grid)):
-                    perm += [d, len(grid) + d]
+                for d in range(len(outer_grid)):
+                    perm += [d, len(outer_grid) + d]
                 x = x.transpose(perm)
                 results.append(x.reshape(t.shape))
             else:
-                starts = jnp.asarray(_static_starts(t, grid))
+                starts = jnp.asarray(_static_starts(t, outer_grid, oidx))
                 out0 = jnp.zeros(t.shape, t.dtype)
 
                 def write(j, acc, stack=stack, starts=starts):
                     st = [starts[j, k] for k in range(starts.shape[1])]
                     return lax.dynamic_update_slice(acc, stack[j], st)
 
-                results.append(lax.fori_loop(0, ncells, write, out0))
+                results.append(lax.fori_loop(0, nouter, write, out0))
         return tuple(results)
 
     return fn
@@ -299,33 +477,52 @@ def _expand_loops(spec: Spec, defines: SimpleNamespace):
 
     def fn(*in_arrays):
         outs0 = tuple(jnp.zeros(t.shape, t.dtype) for t in spec.outputs)
+        scr0 = tuple(jnp.zeros(s.shape, s.dtype) for s in spec.scratch)
 
-        def step(flat_idx, accs):
+        def step(flat_idx, carry):
+            accs, scr_vals = carry
+            # C-order unravel: trailing (reduce) axes iterate innermost, so
+            # scratch carried across steps sees the reduce space sequentially
+            # — the same visit order as the Pallas grid.
             gids = jnp.unravel_index(flat_idx, grid)
             ins = [_slice_tile(t, a, gids, grid) for t, a in zip(spec.inputs, in_arrays)]
-            outs = [TileRef(jnp.zeros(t.resolved_block(), t.dtype)) for t in spec.outputs]
-            ctx = Ctx("loops", defines, gids, grid)
-            spec.body(ctx, *ins, *outs)
-            new = []
-            for t, o, acc in zip(spec.outputs, outs, accs):
+            # With reduce axes, output refs see the block's CURRENT contents
+            # (zeros on first visit): bodies that accumulate directly into an
+            # output behave like the jnp carry / resident Pallas block.
+            # Without them every block is visited once and the slice would
+            # always read zeros — skip it.
+            out_blk0, out_starts = [], []
+            for t, acc in zip(spec.outputs, accs):
                 blk = t.resolved_block()
                 bidx = t.resolved_index(grid)(*gids)
                 starts = [i * b for i, b in zip(bidx, blk)]
-                new.append(lax.dynamic_update_slice(acc, o.value, starts))
-            return tuple(new)
+                out_starts.append(starts)
+                if spec.reduce_axes:
+                    out_blk0.append(lax.dynamic_slice(acc, starts, blk))
+                else:
+                    out_blk0.append(jnp.zeros(blk, t.dtype))
+            out_vals, scr_vals = _run_body(spec, "loops", defines, gids, ins,
+                                           tuple(out_blk0), scr_vals)
+            new = [lax.dynamic_update_slice(acc, val, starts)
+                   for val, acc, starts in zip(out_vals, accs, out_starts)]
+            return tuple(new), scr_vals
 
-        return lax.fori_loop(0, ncells, step, outs0)
+        outs, _ = lax.fori_loop(0, ncells, step, (outs0, scr0))
+        return outs
 
     return fn
 
 
 def _expand_pallas(spec: Spec, defines: SimpleNamespace, interpret: bool):
     grid = spec.grid
+    n_in, n_out = len(spec.inputs), len(spec.outputs)
 
     def body_adapter(*refs):
         gids = tuple(pl.program_id(d) for d in range(len(grid)))
-        ctx = Ctx("pallas", defines, gids, grid)
-        spec.body(ctx, *refs)
+        scr = refs[n_in + n_out:]
+        ctx = Ctx("pallas", defines, gids, grid,
+                  reduce_axes=spec.reduce_axes, scratch=scr)
+        spec.body(ctx, *refs[: n_in + n_out])
 
     def mk_block(t: Tile):
         return pl.BlockSpec(t.resolved_block(), t.resolved_index(grid))
@@ -336,6 +533,7 @@ def _expand_pallas(spec: Spec, defines: SimpleNamespace, interpret: bool):
         in_specs=[mk_block(t) for t in spec.inputs],
         out_specs=[mk_block(t) for t in spec.outputs],
         out_shape=[jax.ShapeDtypeStruct(t.shape, t.dtype) for t in spec.outputs],
+        scratch_shapes=[pltpu.VMEM(s.shape, s.dtype) for s in spec.scratch],
         interpret=interpret,
     )
 

@@ -20,25 +20,31 @@ __all__ = ["autotune", "TuneResult"]
 
 class TuneResult(dict):
     """The winning defines; ``.trials`` holds (defines, seconds) for all
-    candidates, ``.best_seconds`` the winning time."""
+    candidates, ``.best_seconds`` the winning time, ``.skipped`` the
+    (defines, reason) pairs rejected at build time (invalid tilings)."""
 
-    def __init__(self, best_defines, trials):
+    def __init__(self, best_defines, trials, skipped=()):
         super().__init__(best_defines)
         self.trials = trials
         self.best_seconds = min(t for _, t in trials)
+        self.skipped = list(skipped)
 
 
 def _time_once(kernel, args, *, warmup=1, repeats=3):
+    """Returns (best seconds, last output) — callers reuse the output so
+    validation doesn't pay an extra kernel execution."""
+    out = None
     for _ in range(warmup):
         out = kernel.run(*args)
-    jax.block_until_ready(out)
+    if out is not None:  # warmup=0: nothing dispatched yet, nothing to block on
+        jax.block_until_ready(out)
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = kernel.run(*args)
         jax.block_until_ready(out)
         best = min(best, time.perf_counter() - t0)
-    return best
+    return best, out
 
 
 def autotune(device, builder, defines: dict, *, sweep: dict, args,
@@ -54,16 +60,18 @@ def autotune(device, builder, defines: dict, *, sweep: dict, args,
 
     names = sorted(sweep)
     trials = []
+    skipped = []
     reference = None
     for combo in itertools.product(*(sweep[n] for n in names)):
         cand = dict(defines, **dict(zip(names, combo)))
         try:
             kernel = device.build_kernel(builder, cand)
-        except (ValueError, AssertionError):
-            continue  # invalid tiling for this shape
-        sec = _time_once(kernel, args, warmup=warmup, repeats=repeats)
-        if validate:
-            out = [np.asarray(o) for o in kernel.run(*args)]
+        except (ValueError, AssertionError) as e:
+            skipped.append((cand, str(e)))  # invalid tiling for this shape
+            continue
+        sec, raw = _time_once(kernel, args, warmup=warmup, repeats=repeats)
+        if validate and raw is not None:  # raw is None only when warmup=repeats=0
+            out = [np.asarray(o) for o in raw]
             if reference is None:
                 reference = out
             else:
@@ -73,4 +81,4 @@ def autotune(device, builder, defines: dict, *, sweep: dict, args,
     if not trials:
         raise ValueError("no valid candidate in the sweep")
     best = min(trials, key=lambda t: t[1])[0]
-    return TuneResult(best, trials)
+    return TuneResult(best, trials, skipped)

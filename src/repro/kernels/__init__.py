@@ -1,8 +1,11 @@
-"""Hand-tiled Pallas TPU kernels for the LM hot-spots.
+"""Kernels for the LM hot-spots.
 
-Each kernel ships with ``kernel.py`` (pl.pallas_call + BlockSpec),
-``ops.py`` (jitted wrapper + custom VJP) and ``ref.py`` (pure-jnp oracle),
-validated against the oracle in interpret mode across shape/dtype sweeps.
+Each kernel ships with ``kernel.py``, ``ops.py`` (jitted wrapper + custom
+VJP where needed) and ``ref.py`` (pure-jnp oracle), validated against the
+oracle in interpret mode across shape/dtype sweeps. ``flash_attention`` and
+``ssm_scan`` are hand-tiled ``pl.pallas_call`` kernels; ``rmsnorm`` and
+``matmul`` are written once in the unified kernel language
+(``repro.core.lang``) and expand to every backend.
 """
 
-from . import flash_attention, rmsnorm, ssm_scan  # noqa: F401
+from . import flash_attention, matmul, rmsnorm, ssm_scan  # noqa: F401

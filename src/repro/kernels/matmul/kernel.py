@@ -1,0 +1,45 @@
+"""Blocked matmul in the unified kernel language — the reduce-axis showcase.
+
+The K dimension is a sequential reduce axis: grid cells ``(i, j, kk)`` with
+the same ``(i, j)`` are visited in ``kk`` order and share one f32 VMEM scratch
+accumulator (``ctx.scratch``), initialized under ``ctx.when(ctx.is_first)``
+and flushed to the output block under ``ctx.when(ctx.is_last)`` — the same
+init/accumulate/flush protocol flash-attention hand-rolls for its m/l/acc
+state, now expressible in one portable kernel source.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import Scratch, Spec, Tile
+
+__all__ = ["matmul_builder"]
+
+
+def matmul_builder(D):
+    def body(ctx, a, b, c):
+        acc, = ctx.scratch
+
+        @ctx.when(ctx.is_first)
+        def _init():
+            acc[...] = jnp.zeros_like(acc[...])
+
+        acc[...] += jnp.dot(a[...], b[...], preferred_element_type=jnp.float32)
+
+        @ctx.when(ctx.is_last)
+        def _flush():
+            c[...] = acc[...].astype(c.dtype)
+
+    M, K, N = D.M, D.K, D.N
+    bm, bk, bn = D.bm, D.bk, D.bn
+    dtype = jnp.dtype(D.dtype)
+    out_dtype = jnp.dtype(getattr(D, "out_dtype", D.dtype))
+    return Spec(
+        "matmul", grid=(M // bm, N // bn, K // bk),
+        reduce_axes=(2,),
+        scratch=[Scratch((bm, bn), jnp.float32)],
+        inputs=[Tile("a", (M, K), dtype, block=(bm, bk), index=lambda i, j, kk: (i, kk)),
+                Tile("b", (K, N), dtype, block=(bk, bn), index=lambda i, j, kk: (kk, j))],
+        outputs=[Tile("c", (M, N), out_dtype, block=(bm, bn), index=lambda i, j, kk: (i, j))],
+        body=body)

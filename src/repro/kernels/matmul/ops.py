@@ -1,0 +1,42 @@
+"""Public blocked-matmul op over the unified kernel language."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import default_device, fit_block
+from .kernel import matmul_builder
+
+__all__ = ["matmul"]
+
+
+def matmul(a, b, *, block_m=128, block_n=128, block_k=128, backend="pallas",
+           out_dtype=None):
+    """a: (M, K) @ b: (K, N) with f32 accumulation across a reduce axis."""
+    (m, k), (k2, n) = a.shape, b.shape
+    if k != k2:
+        raise ValueError(f"matmul: inner dims disagree ({k} vs {k2})")
+    if a.dtype != b.dtype:
+        raise ValueError(f"matmul: dtypes disagree ({a.dtype} vs {b.dtype})")
+    if m == 0 or n == 0 or k == 0:  # nothing to tile; K==0 contracts to zeros
+        return jnp.zeros((m, n), jnp.dtype(out_dtype or a.dtype))
+    bm, bk, bn = fit_block(block_m, m), fit_block(block_k, k), fit_block(block_n, n)
+    ncells = (m // bm) * (n // bn) * (k // bk)
+    degraded = (bm < min(block_m, m) or bk < min(block_k, k)
+                or bn < min(block_n, n))
+    if degraded and ncells > 1 << 16:
+        # fit_block shrank a block to honor divisibility (prime/awkward dims)
+        # and the resulting grid makes Spec validation and the expansions
+        # pathologically slow — fail loudly instead of silently crawling.
+        # Cleanly-dividing blocks on big shapes are legitimate and pass.
+        raise ValueError(
+            f"matmul: {m}x{k}x{n} degraded the requested blocks to "
+            f"({bm},{bk},{bn}) = {ncells} grid cells; pad the operands or "
+            "pass block sizes that divide the shapes")
+    defines = dict(
+        M=m, K=k, N=n, bm=bm, bk=bk, bn=bn,
+        dtype=jnp.dtype(a.dtype).name,
+        out_dtype=jnp.dtype(out_dtype or a.dtype).name)
+    kernel = default_device(backend).build_kernel(matmul_builder, defines)
+    (out,) = kernel.run(a, b)
+    return out

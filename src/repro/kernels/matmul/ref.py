@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the blocked matmul."""
+
+import jax.numpy as jnp
+
+__all__ = ["matmul_ref"]
+
+
+def matmul_ref(a, b, *, out_dtype=None):
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or a.dtype)

@@ -1,42 +1,61 @@
-"""Fused RMSNorm Pallas kernel (row blocks resident in VMEM)."""
+"""Fused RMSNorm expressed in the unified kernel language.
+
+One builder expands to all three backends (``jnp`` / ``loops`` / ``pallas``);
+the former bespoke ``pl.pallas_call`` is gone. Rows stay resident in VMEM per
+grid cell, so the sum-of-squares reduction is within-tile (no reduce axis
+needed — contrast ``repro.kernels.matmul``, which carries scratch across a
+sequential reduce axis).
+"""
 
 from __future__ import annotations
 
-import functools
+import math
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-__all__ = ["rmsnorm_pallas"]
+from repro.core import Spec, Tile, default_device, fit_block
+
+__all__ = ["rmsnorm_builder", "rmsnorm_unified", "rmsnorm_pallas"]
 
 
-def _rms_kernel(x_ref, w_ref, o_ref, *, eps):
-    x = x_ref[...].astype(jnp.float32)
-    var = (x * x).mean(axis=-1, keepdims=True)
-    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w_ref[...]).astype(o_ref.dtype)
+def rmsnorm_builder(D):
+    def body(ctx, x, w, o):
+        xf = x[...].astype(jnp.float32)
+        var = (xf * xf).mean(axis=-1, keepdims=True)
+        o[...] = (xf * jax.lax.rsqrt(var + D.eps) * w[...]).astype(o.dtype)
+
+    rows, d, br = D.rows, D.d, D.block_rows
+    dtype, wdtype = jnp.dtype(D.dtype), jnp.dtype(D.wdtype)
+    return Spec(
+        "rmsnorm", grid=(rows // br,),
+        inputs=[Tile("x", (rows, d), dtype, block=(br, d), index=lambda i: (i, 0)),
+                Tile("w", (d,), wdtype)],           # whole-array tile
+        outputs=[Tile("o", (rows, d), dtype, block=(br, d), index=lambda i: (i, 0))],
+        body=body)
+
+
+def rmsnorm_unified(x, w, *, eps=1e-6, block_rows=256, backend="pallas",
+                    interpret=None):
+    """x: (..., D); w: (D,). Normalizes the last axis on any backend.
+
+    ``interpret=None`` lets the Device pick (Pallas interpret mode off-TPU);
+    pass an explicit bool to force it."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = math.prod(orig_shape[:-1])
+    if rows == 0 or d == 0:
+        return jnp.asarray(x)  # empty input: nothing to normalize
+    x2 = x.reshape(rows, d)
+    block_rows = fit_block(block_rows, rows)
+    kernel = default_device(backend, interpret).build_kernel(rmsnorm_builder, dict(
+        rows=rows, d=d, block_rows=block_rows, eps=float(eps),
+        dtype=jnp.dtype(x.dtype).name, wdtype=jnp.dtype(w.dtype).name))
+    (out,) = kernel.run(x2, w)
+    return out.reshape(orig_shape)
 
 
 def rmsnorm_pallas(x, w, *, eps=1e-6, block_rows=256, interpret=True):
-    """x: (..., D); w: (D,). Normalizes the last axis."""
-    orig_shape = x.shape
-    d = orig_shape[-1]
-    rows = 1
-    for s in orig_shape[:-1]:
-        rows *= s
-    x2 = x.reshape(rows, d)
-    block_rows = min(block_rows, rows)
-    while rows % block_rows:
-        block_rows -= 1
-    out = pl.pallas_call(
-        functools.partial(_rms_kernel, eps=eps),
-        grid=(rows // block_rows,),
-        in_specs=[
-            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
-            pl.BlockSpec((d,), lambda i: (0,)),
-        ],
-        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
-        interpret=interpret,
-    )(x2, w)
-    return out.reshape(orig_shape)
+    """Backward-compatible name for the pallas expansion (interpret honored)."""
+    return rmsnorm_unified(x, w, eps=eps, block_rows=block_rows,
+                           backend="pallas", interpret=interpret)

@@ -1,0 +1,13 @@
+"""Test bootstrap: make ``src/`` and the tests dir importable regardless of
+how pytest was invoked (``PYTHONPATH=src`` stays the documented tier-1
+command, but plain ``python -m pytest`` must work too)."""
+
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+
+for p in (_HERE, _SRC):
+    if p not in sys.path:
+        sys.path.insert(0, p)

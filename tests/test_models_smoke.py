@@ -144,7 +144,7 @@ def test_ssd_chunked_matches_sequential_ref():
 # rope properties (hypothesis)
 # ---------------------------------------------------------------------------
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 
 @settings(max_examples=10, deadline=None)

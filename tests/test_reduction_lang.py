@@ -1,0 +1,421 @@
+"""Reduction semantics in the unified kernel language: sequential reduce axes
++ VMEM scratch must produce identical results on all three backend expansions
+(the OCCA portability contract extended to grid-carried accumulation), plus
+regression tests for the kernel-cache identity fix and autotune warmup=0."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import BACKENDS, Device, Scratch, Spec, Tile, autotune
+from repro.kernels.matmul import matmul, matmul_builder, matmul_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm_unified
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def run_all_backends(builder, defines, arrays):
+    outs = {}
+    for be in BACKENDS:
+        dev = Device(be)
+        k = dev.build_kernel(builder, defines)
+        outs[be] = [np.asarray(o) for o in k.run(*[jnp.asarray(a) for a in arrays])]
+    return outs
+
+
+def assert_backends_agree(outs, rtol=1e-4, atol=1e-4):
+    ref = outs["jnp"]
+    for be, got in outs.items():
+        for r, g in zip(ref, got):
+            np.testing.assert_allclose(g, r, rtol=rtol, atol=atol,
+                                       err_msg=f"backend {be} diverged")
+
+
+# ---------------------------------------------------------------------------
+# blocked matmul: the canonical reduce-axis kernel
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    mi=st.integers(1, 3), ni=st.integers(1, 3), ki=st.integers(1, 4),
+    bm=st.sampled_from([8, 16]), bn=st.sampled_from([8, 16]),
+    bk=st.sampled_from([8, 16]),
+    seed=st.integers(0, 999),
+)
+def test_matmul_reduce_backend_equivalence(mi, ni, ki, bm, bn, bk, seed):
+    M, N, K = mi * bm, ni * bn, ki * bk
+    rng = np.random.RandomState(seed)
+    a = rng.randn(M, K).astype(np.float32)
+    b = rng.randn(K, N).astype(np.float32)
+    outs = run_all_backends(
+        matmul_builder,
+        dict(M=M, K=K, N=N, bm=bm, bk=bk, bn=bn, dtype="float32",
+             out_dtype="float32"),
+        [a, b])
+    assert_backends_agree(outs)
+    np.testing.assert_allclose(outs["jnp"][0], a @ b, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 999), k=st.sampled_from([32, 48, 96]))
+def test_matmul_op_wrapper_fits_blocks(seed, k):
+    rng = np.random.RandomState(seed)
+    a = rng.randn(24, k).astype(np.float32)
+    b = rng.randn(k, 40).astype(np.float32)
+    ref = np.asarray(matmul_ref(jnp.asarray(a), jnp.asarray(b)))
+    for be in BACKENDS:
+        got = np.asarray(matmul(jnp.asarray(a), jnp.asarray(b),
+                                block_m=16, block_n=16, block_k=64, backend=be))
+        np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_noncanonical_output_index():
+    """Reduce kernel whose output blocks land in transposed order."""
+
+    def builder(D):
+        def body(ctx, a, b, c):
+            acc, = ctx.scratch
+
+            @ctx.when(ctx.is_first)
+            def _init():
+                acc[...] = jnp.zeros_like(acc[...])
+
+            acc[...] += jnp.dot(a[...], b[...], preferred_element_type=jnp.float32)
+
+            @ctx.when(ctx.is_last)
+            def _flush():
+                c[...] = acc[...].astype(c.dtype)
+
+        M, K, N, bm, bk, bn = D.M, D.K, D.N, D.bm, D.bk, D.bn
+        g0, g1 = M // bm, N // bn
+        assert g0 == g1, "transposed map needs a square block grid"
+        return Spec(
+            "matmul_t", grid=(g0, g1, K // bk),
+            reduce_axes=(2,),
+            scratch=[Scratch((bm, bn), jnp.float32)],
+            inputs=[Tile("a", (M, K), jnp.float32, block=(bm, bk),
+                         index=lambda i, j, kk: (j, kk)),       # note: j
+                    Tile("b", (K, N), jnp.float32, block=(bk, bn),
+                         index=lambda i, j, kk: (kk, i))],      # note: i
+            outputs=[Tile("c", (M, N), jnp.float32, block=(bm, bn),
+                          index=lambda i, j, kk: (j, i))],      # transposed
+            body=body)
+
+    rng = np.random.RandomState(3)
+    a = rng.randn(32, 48).astype(np.float32)
+    b = rng.randn(48, 32).astype(np.float32)
+    outs = run_all_backends(
+        builder, dict(M=32, K=48, N=32, bm=8, bk=16, bn=8), [a, b])
+    assert_backends_agree(outs)
+    np.testing.assert_allclose(outs["jnp"][0], a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_accumulates_directly_into_output():
+    """No scratch at all: the body accumulates straight into the output ref
+    across reduce steps. The ref must keep its contents between visits on
+    every backend (loops regression: blocks were re-zeroed per step)."""
+
+    def builder(D):
+        def body(ctx, a, b, c):
+            @ctx.when(ctx.is_first)
+            def _init():
+                c[...] = jnp.zeros_like(c[...])
+
+            c[...] += jnp.dot(a[...], b[...], preferred_element_type=jnp.float32)
+
+        M, K, N, bm, bk, bn = D.M, D.K, D.N, D.bm, D.bk, D.bn
+        return Spec(
+            "matmul_noscr", grid=(M // bm, N // bn, K // bk), reduce_axes=(2,),
+            inputs=[Tile("a", (M, K), jnp.float32, block=(bm, bk),
+                         index=lambda i, j, kk: (i, kk)),
+                    Tile("b", (K, N), jnp.float32, block=(bk, bn),
+                         index=lambda i, j, kk: (kk, j))],
+            outputs=[Tile("c", (M, N), jnp.float32, block=(bm, bn),
+                          index=lambda i, j, kk: (i, j))],
+            body=body)
+
+    rng = np.random.RandomState(5)
+    a = rng.randn(16, 24).astype(np.float32)
+    b = rng.randn(24, 16).astype(np.float32)
+    outs = run_all_backends(builder, dict(M=16, K=24, N=16, bm=8, bk=8, bn=8),
+                            [a, b])
+    assert_backends_agree(outs)
+    np.testing.assert_allclose(outs["jnp"][0], a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_full_reduction_single_output_block():
+    """All grid axes reducing: a grid-carried global sum into one block."""
+
+    def builder(D):
+        def body(ctx, x, out):
+            acc, = ctx.scratch
+
+            @ctx.when(ctx.is_first)
+            def _init():
+                acc[...] = jnp.zeros_like(acc[...])
+
+            acc[...] += jnp.sum(x[...], keepdims=True)
+
+            @ctx.when(ctx.is_last)
+            def _flush():
+                out[...] = acc[...]
+
+        return Spec(
+            "gsum", grid=(D.n // D.bn,), reduce_axes=(0,),
+            scratch=[Scratch((1,), jnp.float32)],
+            inputs=[Tile("x", (D.n,), jnp.float32, block=(D.bn,),
+                         index=lambda r: (r,))],
+            outputs=[Tile("out", (1,), jnp.float32, block=(1,),
+                          index=lambda r: (0,))],
+            body=body)
+
+    x = np.random.RandomState(11).randn(96).astype(np.float32)
+    outs = run_all_backends(builder, dict(n=96, bn=16), [x])
+    assert_backends_agree(outs)
+    np.testing.assert_allclose(outs["jnp"][0], [x.sum()], rtol=1e-4, atol=1e-4)
+
+
+def test_reduce_id_and_dims_exposed():
+    recorded = {}
+
+    def builder(D):
+        def body(ctx, x, out):
+            acc, = ctx.scratch
+            recorded["dim"] = ctx.reduce_dim(0)
+
+            @ctx.when(ctx.is_first)
+            def _init():
+                acc[...] = jnp.zeros_like(acc[...])
+
+            # weight each reduce step by its position: sum_r r * block_sum_r
+            acc[...] += ctx.reduce_id(0).astype(jnp.float32) * jnp.sum(
+                x[...], keepdims=True)
+
+            @ctx.when(ctx.is_last)
+            def _flush():
+                out[...] = acc[...]
+
+        return Spec(
+            "wsum", grid=(4,), reduce_axes=(0,),
+            scratch=[Scratch((1,), jnp.float32)],
+            inputs=[Tile("x", (16,), jnp.float32, block=(4,), index=lambda r: (r,))],
+            outputs=[Tile("out", (1,), jnp.float32, block=(1,), index=lambda r: (0,))],
+            body=body)
+
+    x = np.arange(16, dtype=np.float32)
+    outs = run_all_backends(builder, {}, [x])
+    assert_backends_agree(outs)
+    want = sum(r * x[4 * r: 4 * r + 4].sum() for r in range(4))
+    np.testing.assert_allclose(outs["jnp"][0], [want], rtol=1e-5)
+    assert recorded["dim"] == 4
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm in the unified language
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([4, 60, 256]),
+    d=st.sampled_from([64, 512]),
+    block_rows=st.sampled_from([1, 7, 64, 256]),
+    seed=st.integers(0, 99),
+)
+def test_rmsnorm_unified_backend_equivalence(rows, d, block_rows, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(rows, d), jnp.float32)
+    w = jnp.asarray(rng.randn(d), jnp.float32)
+    ref = np.asarray(rmsnorm_ref(x, w))
+    for be in BACKENDS:
+        got = np.asarray(rmsnorm_unified(x, w, block_rows=block_rows, backend=be))
+        np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5,
+                                   err_msg=f"backend {be} diverged")
+
+
+def test_empty_arrays_short_circuit():
+    assert matmul(jnp.zeros((0, 8)), jnp.zeros((8, 4))).shape == (0, 4)
+    out = matmul(jnp.zeros((4, 0)), jnp.zeros((0, 4)))  # K == 0 contracts
+    assert out.shape == (4, 4)
+    np.testing.assert_allclose(np.asarray(out), 0.0)
+    assert rmsnorm_unified(jnp.zeros((0, 8)), jnp.ones(8)).shape == (0, 8)
+
+
+# ---------------------------------------------------------------------------
+# validation: the relaxed exactly-once rule
+# ---------------------------------------------------------------------------
+
+def test_revisit_without_reduce_axis_still_rejected():
+    def bad(D):
+        def body(ctx, x, y):
+            y[...] = x[...]
+
+        return Spec("bad", grid=(4,),
+                    inputs=[Tile("x", (16,), jnp.float32, block=(4,))],
+                    outputs=[Tile("y", (16,), jnp.float32, block=(4,),
+                                  index=lambda i: (0,))],
+                    body=body)
+
+    with pytest.raises(ValueError, match="visited more than once"):
+        Device("jnp").build_kernel(bad, {})
+
+
+def test_output_index_depending_on_reduce_axis_rejected():
+    def bad(D):
+        def body(ctx, a, c):
+            c[...] = a[...]
+
+        return Spec("bad_r", grid=(2, 2), reduce_axes=(1,),
+                    inputs=[Tile("a", (8, 8), jnp.float32, block=(4, 4),
+                                 index=lambda i, kk: (i, kk))],
+                    outputs=[Tile("c", (8, 8), jnp.float32, block=(4, 4),
+                                  index=lambda i, kk: (i, kk))],
+                    body=body)
+
+    with pytest.raises(ValueError, match="depends on reduce"):
+        Device("jnp").build_kernel(bad, {})
+
+
+def test_non_trailing_reduce_axis_rejected():
+    def bad(D):
+        def body(ctx, a, c):
+            c[...] = a[...]
+
+        return Spec("bad_axis", grid=(2, 2), reduce_axes=(0,),
+                    inputs=[Tile("a", (8, 8), jnp.float32, block=(4, 4))],
+                    outputs=[Tile("c", (8, 8), jnp.float32, block=(4, 4))],
+                    body=body)
+
+    with pytest.raises(ValueError, match="trailing"):
+        Device("jnp").build_kernel(bad, {})
+
+
+# ---------------------------------------------------------------------------
+# kernel-cache identity (regression: closures sharing a __qualname__)
+# ---------------------------------------------------------------------------
+
+def _make_scale_builder(alpha):
+    def builder(D):
+        def body(ctx, x, o):
+            o[...] = alpha * x[...]
+
+        return Spec("scale", grid=(4,),
+                    inputs=[Tile("x", (16,), jnp.float32, block=(4,))],
+                    outputs=[Tile("o", (16,), jnp.float32, block=(4,))],
+                    body=body)
+
+    return builder
+
+
+def test_cache_distinguishes_factory_closures():
+    dev = Device("jnp")
+    b2, b3 = _make_scale_builder(2.0), _make_scale_builder(3.0)
+    assert b2.__qualname__ == b3.__qualname__  # the old cache key collided
+    k2 = dev.build_kernel(b2, {})
+    k3 = dev.build_kernel(b3, {})
+    assert k2 is not k3, "distinct closures must not share cached kernels"
+    assert dev.stats.builds == 2 and dev.stats.cache_hits == 0
+    x = np.ones(16, np.float32)
+    np.testing.assert_allclose(np.asarray(k2.run(x)[0]), 2.0)
+    np.testing.assert_allclose(np.asarray(k3.run(x)[0]), 3.0)
+    # same closure object still hits the cache
+    assert dev.build_kernel(b2, {}) is k2
+    assert dev.stats.cache_hits == 1
+
+
+def test_cache_hits_for_bound_method_builders():
+    class KernelFamily:
+        def __init__(self, alpha):
+            self.alpha = alpha
+
+        def builder(self, D):
+            alpha = self.alpha
+
+            def body(ctx, x, o):
+                o[...] = alpha * x[...]
+
+            return Spec("mscale", grid=(4,),
+                        inputs=[Tile("x", (16,), jnp.float32, block=(4,))],
+                        outputs=[Tile("o", (16,), jnp.float32, block=(4,))],
+                        body=body)
+
+    dev = Device("jnp")
+    fam2, fam3 = KernelFamily(2.0), KernelFamily(3.0)
+    k2 = dev.build_kernel(fam2.builder, {})
+    # fam2.builder is a fresh bound-method object each access: must still hit
+    assert dev.build_kernel(fam2.builder, {}) is k2
+    assert dev.stats.cache_hits == 1
+    # a different instance is a different kernel
+    k3 = dev.build_kernel(fam3.builder, {})
+    assert k3 is not k2
+    x = np.ones(16, np.float32)
+    np.testing.assert_allclose(np.asarray(k2.run(x)[0]), 2.0)
+    np.testing.assert_allclose(np.asarray(k3.run(x)[0]), 3.0)
+
+
+def test_cache_keys_instances_by_identity_not_eq():
+    class EqByName:
+        """Custom __eq__/__hash__ that ignore the state the builder uses."""
+
+        def __init__(self, name, scale):
+            self.name, self.scale = name, scale
+
+        def __eq__(self, other):
+            return isinstance(other, EqByName) and self.name == other.name
+
+        def __hash__(self):
+            return hash(self.name)
+
+        def builder(self, D):
+            scale = self.scale
+
+            def body(ctx, x, o):
+                o[...] = scale * x[...]
+
+            return Spec("escale", grid=(4,),
+                        inputs=[Tile("x", (16,), jnp.float32, block=(4,))],
+                        outputs=[Tile("o", (16,), jnp.float32, block=(4,))],
+                        body=body)
+
+    dev = Device("jnp")
+    f2, f3 = EqByName("same", 2.0), EqByName("same", 3.0)
+    assert f2 == f3  # equal per __eq__, but different kernels
+    k2 = dev.build_kernel(f2.builder, {})
+    k3 = dev.build_kernel(f3.builder, {})
+    assert k3 is not k2
+    x = np.ones(16, np.float32)
+    np.testing.assert_allclose(np.asarray(k2.run(x)[0]), 2.0)
+    np.testing.assert_allclose(np.asarray(k3.run(x)[0]), 3.0)
+
+
+def test_cache_does_not_pin_dead_builders():
+    import gc
+
+    dev = Device("jnp")
+    dev.build_kernel(_make_scale_builder(4.0), {})
+    gc.collect()
+    assert len(dev._cache) == 0, "weak cache must drop GC'd builders"
+
+
+# ---------------------------------------------------------------------------
+# autotune: warmup=0 regression + reduce-kernel sweeps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("warmup", [0, 1])
+def test_autotune_warmup_paths(warmup):
+    dev = Device("jnp")
+    rng = np.random.RandomState(0)
+    a = rng.randn(32, 32).astype(np.float32)
+    b = rng.randn(32, 32).astype(np.float32)
+    base = dict(M=32, K=32, N=32, bm=16, bn=16, dtype="float32",
+                out_dtype="float32")
+    result = autotune(dev, matmul_builder, base,
+                      sweep={"bk": [5, 8, 16, 32]},    # 5 is invalid (32 % 5)
+                      args=(a, b), warmup=warmup, repeats=1)
+    assert result["bk"] in (8, 16, 32)
+    assert len(result.trials) == 3
+    assert len(result.skipped) == 1 and result.skipped[0][0]["bk"] == 5
+    k = dev.build_kernel(matmul_builder, dict(base, **{"bk": result["bk"]}))
+    np.testing.assert_allclose(np.asarray(k.run(a, b)[0]), a @ b,
+                               rtol=1e-4, atol=1e-4)

@@ -1,5 +1,5 @@
-"""Substrate tests: optimizer, data determinism, checkpointing, recovery,
-watchdog, sharding rules, elastic mesh choice."""
+"""Substrate tests: device memory, optimizer, data determinism,
+checkpointing, recovery, watchdog, sharding rules, elastic mesh choice."""
 
 import os
 
@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager, restore_tree, save_tree
@@ -20,6 +20,24 @@ from repro.runtime import ChaosError, FailureInjector, StepWatchdog, \
     choose_mesh_shape
 from repro.launch.mesh import make_local_mesh
 from repro.launch.train import TrainLoop
+
+
+# ---------------------------------------------------------------------------
+# device memory
+# ---------------------------------------------------------------------------
+
+def test_malloc_casts_array_to_requested_dtype():
+    from repro.core import Device
+
+    dev = Device("jnp")
+    m = dev.malloc(np.arange(4, dtype=np.int32), jnp.float32)
+    assert m.dtype == jnp.float32          # dtype was silently dropped before
+    np.testing.assert_allclose(m.to_host(), [0.0, 1.0, 2.0, 3.0])
+    # no dtype -> keep the array's own
+    assert dev.malloc(np.arange(4, dtype=np.int32)).dtype == jnp.int32
+    # shape forms unchanged
+    assert dev.malloc((2, 3)).shape == (2, 3)
+    assert dev.malloc(5, jnp.int32).dtype == jnp.int32
 
 
 # ---------------------------------------------------------------------------
