@@ -15,29 +15,30 @@ import numpy as np
 from repro.kernels.flash_attention.ref import mha_chunked, mha_ref
 from repro.kernels.ssm_scan.ref import selective_scan_assoc
 from repro.layers.mamba import ssd_chunked
-from .common import Row, time_fn
+from .common import Row, SMOKE_TIME, time_fn
 
 
-def run(rows: list):
+def run(rows: list, smoke: bool = False):
+    tkw = SMOKE_TIME if smoke else {}
     rng = np.random.RandomState(0)
-    b, h, s, d = 1, 8, 2048, 64
+    b, h, s, d = (1, 2, 128, 32) if smoke else (1, 8, 2048, 64)
     q = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
     k = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
     v = jnp.asarray(rng.randn(b, h, s, d), jnp.float32)
     flops = 4 * b * h * s * s * d
 
     f_ref = jax.jit(lambda q, k, v: mha_ref(q, k, v, causal=True))
-    sec = time_fn(f_ref, q, k, v)
+    sec = time_fn(f_ref, q, k, v, **tkw)
     rows.append(Row(f"attn/ref/s{s}", sec, f"{flops / sec / 1e9:.1f} GFLOP/s"))
 
     f_chk = jax.jit(lambda q, k, v: mha_chunked(q, k, v, causal=True,
                                                 block_q=256))
-    sec = time_fn(f_chk, q, k, v)
+    sec = time_fn(f_chk, q, k, v, **tkw)
     rows.append(Row(f"attn/chunked/s{s}", sec,
                     f"{flops / sec / 1e9:.1f} GFLOP/s"))
 
     # ssm scans
-    bt, L, dm, n = 1, 2048, 512, 16
+    bt, L, dm, n = (1, 128, 64, 8) if smoke else (1, 2048, 512, 16)
     x = jnp.asarray(rng.randn(bt, L, dm), jnp.float32)
     dt = jnp.asarray(np.abs(rng.randn(bt, L, dm)) * 0.1, jnp.float32)
     A = -jnp.asarray(np.abs(rng.randn(dm, n)) + 0.1, jnp.float32)
@@ -45,17 +46,18 @@ def run(rows: list):
     C = jnp.asarray(rng.randn(bt, L, n), jnp.float32)
     D = jnp.asarray(rng.randn(dm), jnp.float32)
     f_assoc = jax.jit(lambda *a: selective_scan_assoc(*a)[0])
-    sec = time_fn(f_assoc, x, dt, A, B, C, D)
+    sec = time_fn(f_assoc, x, dt, A, B, C, D, **tkw)
     el = bt * L * dm * n
     rows.append(Row(f"ssm/assoc/L{L}", sec, f"{el / sec / 1e6:.1f} Mcell/s"))
 
     # mamba2 SSD chunked
-    hh, p = 8, 64
+    hh, p = (2, 16) if smoke else (8, 64)
+    chunk = min(128, L)
     xh = jnp.asarray(rng.randn(bt, L, hh, p), jnp.float32)
     dth = jnp.asarray(np.abs(rng.randn(bt, L, hh)) * 0.1, jnp.float32)
     Ah = -jnp.asarray(np.abs(rng.randn(hh)) + 0.2, jnp.float32)
-    f_ssd = jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0])
-    sec = time_fn(f_ssd, xh, dth, Ah, B, C)
+    f_ssd = jax.jit(lambda *a: ssd_chunked(*a, chunk=chunk)[0])
+    sec = time_fn(f_ssd, xh, dth, Ah, B, C, **tkw)
     rows.append(Row(f"ssm/ssd_chunked/L{L}", sec,
                     f"{bt * L * hh * p * n / sec / 1e6:.1f} Mcell/s"))
     return rows

@@ -6,14 +6,19 @@ import time
 
 import jax
 
-__all__ = ["time_fn", "Row", "emit"]
+__all__ = ["time_fn", "Row", "emit", "SMOKE_TIME"]
+
+
+SMOKE_TIME = dict(warmup=1, repeats=1)  # one rep: correctness-drift canary
 
 
 def time_fn(fn, *args, warmup=2, repeats=5, inner=1):
     """Best-of-repeats wall time per call (seconds)."""
+    out = None
     for _ in range(warmup):
         out = fn(*args)
-    jax.block_until_ready(out)
+    if out is not None:  # warmup=0: nothing dispatched yet
+        jax.block_until_ready(out)
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()

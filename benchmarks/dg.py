@@ -7,14 +7,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.apps import dg_swe
-from .common import Row, time_fn
+from .common import Row, SMOKE_TIME, time_fn
 
 ORDERS = (1, 2, 3, 4, 5, 6, 7)
 
 
-def run(rows: list):
-    for n in ORDERS:
-        nx = 24
+def run(rows: list, smoke: bool = False):
+    tkw = SMOKE_TIME if smoke else {}
+    for n in ((1, 2) if smoke else ORDERS):
+        nx = 4 if smoke else 24
         for backend in ("jnp", "loops", "native"):
             model = "jnp" if backend == "native" else backend
             app = dg_swe.DGVolume(model=model, nx=nx, ny=nx, n=n, jitter=0.1)
@@ -27,11 +28,11 @@ def run(rows: list):
                 fn = jax.jit(lambda q: dg_swe.volume_ref(
                     q, app.o_geom.data, app.o_db.data, app.o_dr.data,
                     app.o_ds.data))
-                sec = time_fn(fn, Q, inner=2)
+                sec = time_fn(fn, Q, inner=2, **tkw)
             else:
                 if backend == "loops" and n > 4:
                     continue
-                sec = time_fn(lambda: app.rhs_volume(Q), inner=2)
+                sec = time_fn(lambda: app.rhs_volume(Q), inner=2, **tkw)
             gflops = app.E * dg_swe.dg_flops_per_element(app.np_) / sec / 1e9
             gbs = app.E * dg_swe.dg_bytes_per_element(app.np_, 4) / sec / 1e9
             rows.append(Row(f"dg/{backend}/N{n}/E{app.E}", sec,

@@ -27,13 +27,22 @@ def _roofline_rows(rows):
     return rows
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, one rep per row: a fast CI canary that "
+                         "every benchmark path still builds and runs "
+                         "(timings are not meaningful)")
+    args = ap.parse_args(argv)
+
     rows = []
-    fd.run(rows)
-    sem.run(rows)
-    dg.run(rows)
-    attention.run(rows)
-    unified.run(rows)
+    fd.run(rows, smoke=args.smoke)
+    sem.run(rows, smoke=args.smoke)
+    dg.run(rows, smoke=args.smoke)
+    attention.run(rows, smoke=args.smoke)
+    unified.run(rows, smoke=args.smoke)
     try:
         _roofline_rows(rows)
     except Exception as e:  # artifacts may not exist yet

@@ -1,40 +1,62 @@
-"""Unified-language kernel rows: matmul (reduce axis) + rmsnorm on all three
-backend expansions. The pallas-vs-oracle ratio is the paper's portability
-pitch made measurable: one source, per-backend performance."""
+"""Unified-language kernel rows: matmul (reduce axis), rmsnorm and the
+flash-attention forward (masked grid cells + reduce axis + scratch) on all
+three backend expansions. The pallas-vs-oracle ratio is the paper's
+portability pitch made measurable: one source, per-backend performance."""
 
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import BACKENDS
+from repro.kernels.flash_attention import flash_attention
 from repro.kernels.matmul import matmul
-from repro.kernels.rmsnorm.kernel import rmsnorm_unified
+from repro.kernels.rmsnorm import rmsnorm_unified
 
-from .common import Row, time_fn
+from .common import Row, SMOKE_TIME, time_fn
 
 __all__ = ["run"]
 
 
-def run(rows):
+def run(rows, smoke: bool = False):
+    tkw = SMOKE_TIME if smoke else {}
     rng = np.random.RandomState(0)
 
-    m = k = n = 256
+    m = k = n = 64 if smoke else 256
+    bs = 32 if smoke else 64
     a = rng.randn(m, k).astype(np.float32)
     b = rng.randn(k, n).astype(np.float32)
     for backend in BACKENDS:
         sec = time_fn(lambda a_, b_, be=backend: matmul(
-            a_, b_, block_m=64, block_n=64, block_k=64, backend=be), a, b)
+            a_, b_, block_m=bs, block_n=bs, block_k=bs, backend=be), a, b,
+            **tkw)
         rows.append(Row(f"unified/matmul/{backend}", sec,
-                        f"M=K=N={m} bm=bn=bk=64 "
+                        f"M=K=N={m} bm=bn=bk={bs} "
                         f"gflops={2 * m * k * n / sec / 1e9:.1f}"))
 
-    r, d = 2048, 1024
+    r, d = (64, 128) if smoke else (2048, 1024)
+    br = 32 if smoke else 256
     x = rng.randn(r, d).astype(np.float32)
     w = rng.randn(d).astype(np.float32)
     for backend in BACKENDS:
         sec = time_fn(lambda x_, w_, be=backend: rmsnorm_unified(
-            x_, w_, block_rows=256, backend=be), x, w)
+            x_, w_, block_rows=br, backend=be), x, w, **tkw)
         rows.append(Row(f"unified/rmsnorm/{backend}", sec,
-                        f"rows={r} d={d} block_rows=256 "
+                        f"rows={r} d={d} block_rows={br} "
                         f"gbps={3 * x.nbytes / sec / 1e9:.1f}"))
+
+    # flash attention fwd, one source on every backend (CPU: interpret-mode
+    # correctness artifact; the compiled pallas path is the TPU target)
+    b2, h2, s2, d2 = (1, 2, 128, 32) if smoke else (1, 2, 512, 64)
+    bq = 64 if smoke else 128
+    q = rng.randn(b2, h2, s2, d2).astype(np.float32)
+    kk = rng.randn(b2, h2, s2, d2).astype(np.float32)
+    vv = rng.randn(b2, h2, s2, d2).astype(np.float32)
+    afl = 4 * b2 * h2 * s2 * s2 * d2
+    for backend in BACKENDS:
+        sec = time_fn(lambda q_, k_, v_, be=backend: flash_attention(
+            q_, k_, v_, causal=True, block_q=bq, block_kv=bq, backend=be),
+            q, kk, vv, **tkw)
+        rows.append(Row(f"unified/flash_attention/{backend}", sec,
+                        f"s={s2} bq=bkv={bq} "
+                        f"gflops={afl / sec / 1e9:.1f}"))
     return rows

@@ -1,4 +1,10 @@
-"""Quickstart: one kernel source, three backends (the paper's core claim).
+"""Quickstart: declare an op ONCE, run it everywhere (the paper's core claim).
+
+``define_op`` is the host API: you write (1) a kernel builder in the unified
+language and (2) a pure oracle, and the front-end owns backend selection,
+shape->defines derivation, the kernel build cache, autotuning and (when
+declared) the custom VJP — the OCCA device/kernel/tuning surface as one
+declaration.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,7 +12,7 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BACKENDS, Device, Spec, Tile
+from repro.core import BACKENDS, Spec, Tile, define_op, get_op, registered_ops
 
 
 # 1. Write the kernel ONCE (OCCA-style: grid of work-groups over tiles).
@@ -23,32 +29,59 @@ def axpby_builder(D):
         body=body)
 
 
+# 2. Write the oracle (what the kernel MUST compute, any backend).
+def axpby_ref(x, y, *, alpha=2.0, beta=-0.5):
+    return alpha * x + beta * y
+
+
+# 3. Declare the op: shapes -> defines is the only host logic you write.
+axpby = define_op(
+    "axpby",
+    builder=axpby_builder,
+    ref=axpby_ref,
+    derive_defines=lambda args, params: dict(
+        n=args[0].size, bn=min(params["bn"], args[0].size),
+        alpha=params["alpha"], beta=params["beta"]),
+    defaults=dict(alpha=2.0, beta=-0.5, bn=4096),
+    ref_params=("alpha", "beta"),
+    sweep=dict(bn=[512, 2048, 4096, 16384]),
+)
+
+
 def main():
+    # keep the demo's tune cache out of the user's real ~/.cache (CI runs
+    # this script); export REPRO_CACHE_DIR yourself to see cross-process hits
+    import os
+    import tempfile
+    os.environ.setdefault("REPRO_CACHE_DIR", tempfile.mkdtemp(prefix="repro-occa-"))
+
     rng = np.random.RandomState(0)
     x = rng.randn(1 << 16).astype(np.float32)
     y = rng.randn(1 << 16).astype(np.float32)
+    want = axpby_ref(x, y)
 
-    results = {}
-    for backend in BACKENDS:             # "jnp", "loops", "pallas"
-        # 2. Pick the backend at RUN TIME (occa::device + addDefine + build).
-        device = Device(backend)
-        kernel = device.build_kernel(axpby_builder,
-                                     dict(n=x.size, bn=4096, alpha=2.0, beta=-0.5))
-        o_x, o_y = device.malloc(x), device.malloc(y)
-        o_out = device.malloc(np.zeros_like(x))
-        # 3. Same call site for every backend (paper listing 9).
-        kernel(o_x, o_y, o_out)
-        results[backend] = o_out.to_host()
-        # runtime compilation cache: second build is a cache hit
-        again = device.build_kernel(axpby_builder,
-                                    dict(n=x.size, bn=4096, alpha=2.0, beta=-0.5))
-        assert again is kernel and device.stats.cache_hits == 1
-
-    want = 2.0 * x - 0.5 * y
-    for backend, got in results.items():
+    # 4. Same call site for every backend — the backend is a RUN-TIME knob
+    #    ("auto" = pallas, interpret off-TPU). Kernel builds are cached.
+    for backend in ("auto",) + BACKENDS:     # auto, jnp, loops, pallas
+        got = np.asarray(axpby(x, y, backend=backend))
         np.testing.assert_allclose(got, want, rtol=1e-6)
         print(f"{backend:>7s}: OK  (max|err| = {np.abs(got - want).max():.2e})")
-    print("one kernel source -> three backend expansions, identical results")
+
+    # 5. The declaration registers the op: tooling can enumerate every op
+    #    and its oracle (the registry-wide portability test does exactly this).
+    import repro.kernels  # noqa: F401 — registers the library op families
+    assert get_op("axpby") is axpby
+    print("registry:", ", ".join(sorted(registered_ops())))
+
+    # 6. Per-op autotuning: sweep the declared knobs on real args, validate
+    #    every candidate against the oracle, persist the winner on disk
+    #    (~/.cache/repro-occa) — a warm cache re-times NOTHING.
+    best = axpby.tune((x, y), backend="jnp", repeats=1)
+    print(f"tuned bn={best['bn']} "
+          f"({'cache hit' if best.cached else f'{len(best.trials)} trials'}, "
+          f"best {best.best_seconds * 1e6:.0f} us)")
+
+    print("one declaration -> every backend, tuned, identical results")
 
 
 if __name__ == "__main__":

@@ -16,4 +16,10 @@ if ! python -c "import pytest" >/dev/null 2>&1; then
     exit 1
 fi
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# Benchmark smoke: tiny shapes, one rep — every benchmark path must still
+# build and run, so benchmark drift breaks tier-1 instead of rotting silently.
+echo "ci.sh: benchmark smoke run"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --smoke >/dev/null
+echo "ci.sh: benchmark smoke OK"

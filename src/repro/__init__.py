@@ -1,9 +1,12 @@
 """repro — OCCA (2014) rebuilt as a production JAX/TPU framework.
 
 Layers:
-  repro.core      the paper: unified kernel language + host API + autotuner
+  repro.core      the paper: unified kernel language + define_op host API +
+                  persistent autotuner (op registry in repro.core.op)
   repro.apps      paper §4 numerical methods (FD / SEM / DG-SWE)
-  repro.kernels   Pallas TPU kernels (flash attention fwd/bwd/decode, ssm, rmsnorm)
+  repro.kernels   define_op declarations over the unified language (matmul,
+                  rmsnorm, ssm_scan, flash attention fwd) + bespoke Pallas
+                  bwd/decode kernels
   repro.layers    attention/MLP/MoE/mamba blocks
   repro.models    unified LM over the assigned architecture pool
   repro.configs   architecture configs + input-shape grid

@@ -9,7 +9,8 @@ from .lang import BACKENDS, Ctx, Scratch, Spec, Tile, TileRef, cdiv, expand
 from .device import Device, BuildStats, default_device, fit_block
 from .kernel import Kernel
 from .memory import Memory
-from .tune import TuneResult, autotune
+from .op import Op, OpVJP, define_op, get_op, oracle_vjp, registered_ops
+from .tune import TuneResult, autotune, tune_cache_dir, tune_cache_key
 
 __all__ = [
     "BACKENDS",
@@ -18,6 +19,8 @@ __all__ = [
     "Device",
     "Kernel",
     "Memory",
+    "Op",
+    "OpVJP",
     "Scratch",
     "Spec",
     "Tile",
@@ -26,6 +29,12 @@ __all__ = [
     "autotune",
     "cdiv",
     "default_device",
+    "define_op",
     "expand",
     "fit_block",
+    "get_op",
+    "oracle_vjp",
+    "registered_ops",
+    "tune_cache_dir",
+    "tune_cache_key",
 ]

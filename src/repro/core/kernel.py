@@ -2,8 +2,6 @@
 
 from __future__ import annotations
 
-import jax
-
 from .memory import Memory
 
 __all__ = ["Kernel"]
@@ -36,10 +34,15 @@ class Kernel:
                 f"kernel {self.name!r} expects {self.n_in} inputs + "
                 f"{self.n_out} outputs, got {len(args)} args")
         ins = [a.data if isinstance(a, Memory) else a for a in args[: self.n_in]]
-        outs = self._compiled(*ins)
-        for slot, val in zip(args[self.n_in:], outs):
+        for slot in args[self.n_in:]:
             if not isinstance(slot, Memory):
                 raise TypeError(f"kernel {self.name!r}: output args must be Memory")
+            if slot.device is not self.device:
+                raise ValueError(
+                    f"kernel {self.name!r}: output Memory belongs to "
+                    f"{slot.device!r}, not this kernel's {self.device!r}")
+        outs = self._compiled(*ins)
+        for slot, val in zip(args[self.n_in:], outs):
             slot._rebind(val)
         return outs
 
@@ -48,7 +51,8 @@ class Kernel:
         return self._compiled(*in_arrays)
 
     def lowered_text(self, *in_arrays) -> str:
-        return jax.jit(self._compiled).lower(*in_arrays).as_text()
+        # self._compiled is already jitted by Device.build_kernel
+        return self._compiled.lower(*in_arrays).as_text()
 
     def __repr__(self):
         return (f"Kernel({self.name!r}, backend={self.device.backend}, "

@@ -24,6 +24,18 @@ Keyword mapping (paper appendix tables → this module):
   occaBarrier(...)             ``ctx.barrier()`` — a no-op: a TPU block executes
                                as ONE sequenced program, which is exactly the
                                paper's OpenMP "inner loops run serially" model
+  guarded occaOuterFor body    ``ctx.cell_when(pred)`` — masked/predicated grid
+  (if(...) around the block)   cells: skip a whole block's work when ``pred``
+                               (a function of grid ids + defines) is false.
+                               Expands to ``pl.when`` on pallas and to
+                               ``lax.cond`` over the tracked refs on jnp/loops
+  loop scheduling pragmas      dimension_semantics — the pallas expansion marks
+  (omp parallel for / CUDA     outer grid axes ``"parallel"`` and reduce axes
+  blockIdx independence)       ``"arbitrary"`` so real-TPU grids pipeline
+  streamed outputs             ``Tile(..., stream=True)`` — an *output* whose
+  (writes inside the           index map may depend on reduce ids: every grid
+  sequential inner loop)       cell writes its own block exactly once (e.g. the
+                               per-chunk ``y`` of a chunked scan)
   occaPrivate(Array)           ``ctx.private(x)`` — per-tile values (registers)
   occaCPU/occaGPU/occaOpenMP…  ``ctx.backend`` / ``ctx.is_pallas`` etc.
   occaKernelInfoArg            the ``ctx`` argument itself
@@ -42,9 +54,11 @@ jnp/loops/interpret expansions), so read-modify-write bodies must initialize
 the block under ``ctx.when(ctx.is_first)`` as well.
 
 Restrictions (asserted): block shapes must divide the full array shape; output
-index maps must not depend on reduce-axis ids; and every output block is
-visited exactly once per reduce iteration-space (exactly once overall when the
-kernel has no reduce axes).
+index maps must not depend on reduce-axis ids — unless the tile is declared
+``stream=True``, in which case the map MAY use reduce ids and every grid cell
+must write a distinct block (chunked-scan ``y`` writes); and every output
+block is visited exactly once per reduce iteration-space (exactly once overall
+when the kernel has no reduce axes).
 """
 
 from __future__ import annotations
@@ -100,6 +114,10 @@ class Tile:
     dtype: object
     block: tuple[int, ...] | None = None
     index: Callable[..., tuple] | None = None
+    # Output tiles only: a *streamed* output's index map may depend on reduce
+    # ids — each grid cell (outer x reduce) writes a distinct block exactly
+    # once, instead of accumulating into one block across the reduce space.
+    stream: bool = False
 
     def resolved_block(self) -> tuple[int, ...]:
         blk = tuple(self.shape) if self.block is None else tuple(self.block)
@@ -188,11 +206,30 @@ class Spec:
         # iteration-space (exactly once overall for non-reduce kernels), and
         # output index maps must not depend on the reduce ids (the language's
         # accumulate-then-flush contract needs a stable destination).
+        # Streamed outputs relax that: their index map MAY depend on reduce
+        # ids, and instead every grid cell must write a distinct block with
+        # the full grid covering all blocks exactly once.
         for t in self.outputs:
             blk = t.resolved_block()
             idx = t.resolved_index(self.grid)
+            nblocks = math.prod(s // b for s, b in zip(t.shape, blk))
+            if t.stream:
+                visited: set[tuple] = set()
+                for cell in np.ndindex(*self.grid):
+                    bi = tuple(int(i) for i in idx(*cell))
+                    if bi in visited:
+                        raise ValueError(
+                            f"stream output tile {t.name!r} block {bi} visited "
+                            "more than once; streamed outputs must write a "
+                            "distinct block per grid cell")
+                    visited.add(bi)
+                if len(visited) != nblocks:
+                    raise ValueError(
+                        f"stream output tile {t.name!r}: {len(visited)} blocks "
+                        f"visited but {nblocks} exist; kernel would leave garbage")
+                continue
             seen: dict[tuple, tuple] = {}
-            visited: set[tuple] = set()
+            visited = set()
             for cell in np.ndindex(*self.grid):
                 bi = tuple(int(i) for i in idx(*cell))
                 outer = cell[:k]
@@ -201,7 +238,8 @@ class Spec:
                         raise ValueError(
                             f"output tile {t.name!r}: index map depends on reduce "
                             f"axes (cell {cell} -> {bi}, expected {seen[outer]}); "
-                            "reduce steps must accumulate into one block")
+                            "reduce steps must accumulate into one block "
+                            "(or mark the tile stream=True)")
                 else:
                     if bi in visited:
                         raise ValueError(
@@ -210,7 +248,6 @@ class Spec:
                             "(Spec(reduce_axes=...)) — implicit revisits are rejected")
                     seen[outer] = bi
                     visited.add(bi)
-            nblocks = math.prod(s // b for s, b in zip(t.shape, blk))
             if len(seen) != nblocks:
                 raise ValueError(
                     f"output tile {t.name!r}: {len(seen)} blocks visited but "
@@ -339,6 +376,37 @@ class Ctx:
             return fn
         return deco
 
+    def cell_when(self, pred):
+        """Masked grid cell: run the thunk only when ``pred`` holds, skipping
+        the WHOLE block's work otherwise (flash-attention's causal block skip).
+
+        ``pred`` must be a function of grid ids and defines only. Under pallas
+        this is ``pl.when`` (no MXU work issued for skipped cells); under
+        jnp/loops the thunk becomes one branch of a ``lax.cond`` over the
+        tracked refs (a real skip on the loops expansion; a select under the
+        jnp vmap, which is semantically identical)."""
+        def deco(fn):
+            if isinstance(pred, (bool, np.bool_)):
+                if pred:
+                    fn()
+                return fn
+            if self.backend == "pallas":
+                pl.when(pred)(fn)
+                return fn
+            before = tuple(r._value for r in self._refs)
+
+            def _taken(vals):
+                for r, v in zip(self._refs, vals):
+                    r._value = v
+                fn()
+                return tuple(r._value for r in self._refs)
+
+            after = lax.cond(pred, _taken, lambda vals: vals, before)
+            for r, v in zip(self._refs, after):
+                r._value = v
+            return fn
+        return deco
+
     # --- occaInnerId: lanes of the vectorized tile ------------------------
     def lane_ids(self, n: int):
         return jnp.arange(n)
@@ -417,55 +485,96 @@ def _run_body(spec: Spec, backend: str, defines, gids, ins, out_vals, scr_vals):
     return tuple(o.value for o in outs), tuple(s.value for s in scr)
 
 
+def _assemble_blocks(t: Tile, stack, grid_used, index_fn):
+    """Scatter a (prod(grid_used), *blk) stack of blocks into the full array."""
+    blk = t.resolved_block()
+    ngrid = math.prod(grid_used) if grid_used else 1
+    if _is_canonical(t, grid_used, index_fn):
+        # (g0..gk, b0..bk) -> interleave -> full shape
+        x = stack.reshape(tuple(grid_used) + blk)
+        perm = []
+        for d in range(len(grid_used)):
+            perm += [d, len(grid_used) + d]
+        x = x.transpose(perm)
+        return x.reshape(t.shape)
+    starts = jnp.asarray(_static_starts(t, grid_used, index_fn))
+    out0 = jnp.zeros(t.shape, t.dtype)
+
+    def write(j, acc):
+        st = [starts[j, k] for k in range(starts.shape[1])]
+        return lax.dynamic_update_slice(acc, stack[j], st)
+
+    return lax.fori_loop(0, ngrid, write, out0)
+
+
 def _expand_jnp(spec: Spec, defines: SimpleNamespace):
     grid = spec.grid
     outer_grid = spec.outer_grid
     red_grid = spec.reduce_grid
     nouter = math.prod(outer_grid) if outer_grid else 1
     nred = math.prod(red_grid) if red_grid else 1
+    streamed = [t.stream for t in spec.outputs]
 
     def fn(*in_arrays):
         def cell(flat_idx):
             ogids = jnp.unravel_index(flat_idx, outer_grid) if outer_grid else ()
             out0 = tuple(jnp.zeros(t.resolved_block(), t.dtype) for t in spec.outputs)
             scr0 = tuple(jnp.zeros(s.shape, s.dtype) for s in spec.scratch)
+            # Streamed outputs write one block per reduce step: stack them
+            # per-cell and scatter after the loop.
+            stk0 = tuple(jnp.zeros((nred,) + t.resolved_block(), t.dtype)
+                         for t in spec.outputs if t.stream)
 
             def step(r, carry):
-                out_vals, scr_vals = carry
+                out_vals, stacks, scr_vals = carry
                 rgids = jnp.unravel_index(r, red_grid) if red_grid else ()
                 gids = tuple(ogids) + tuple(rgids)
                 ins = [_slice_tile(t, a, gids, grid)
                        for t, a in zip(spec.inputs, in_arrays)]
-                return _run_body(spec, "jnp", defines, gids, ins, out_vals, scr_vals)
+                # a stream block is fresh (contents undefined -> zeros) each
+                # visit; accumulating outputs keep their carried contents
+                cur = tuple(jnp.zeros_like(v) if streamed[i] else v
+                            for i, v in enumerate(out_vals))
+                new_out, new_scr = _run_body(spec, "jnp", defines, gids, ins,
+                                             cur, scr_vals)
+                new_stacks = []
+                si = 0
+                for i, t in enumerate(spec.outputs):
+                    if t.stream:
+                        new_stacks.append(lax.dynamic_update_slice(
+                            stacks[si], new_out[i][None],
+                            (r,) + (0,) * len(t.resolved_block())))
+                        si += 1
+                return new_out, tuple(new_stacks), new_scr
 
             if red_grid:
-                out_vals, _ = lax.fori_loop(0, nred, step, (out0, scr0))
+                out_vals, stacks, _ = lax.fori_loop(0, nred, step,
+                                                    (out0, stk0, scr0))
             else:
-                out_vals, _ = step(0, (out0, scr0))
-            return out_vals
+                out_vals, stacks, _ = step(0, (out0, stk0, scr0))
+            si = 0
+            per_out = []
+            for i, t in enumerate(spec.outputs):
+                if t.stream:
+                    per_out.append(stacks[si])
+                    si += 1
+                else:
+                    per_out.append(out_vals[i])
+            return tuple(per_out)
 
-        blocks = jax.vmap(cell)(jnp.arange(nouter))  # tuple of (nouter, *blk)
+        blocks = jax.vmap(cell)(jnp.arange(nouter))  # tuple of (nouter, ...) stacks
         results = []
         for t, stack in zip(spec.outputs, blocks):
             blk = t.resolved_block()
-            oidx = spec.outer_index(t)
-            if _is_canonical(t, outer_grid, oidx):
-                # (g0..gk, b0..bk) -> interleave -> full shape
-                x = stack.reshape(outer_grid + blk)
-                perm = []
-                for d in range(len(outer_grid)):
-                    perm += [d, len(outer_grid) + d]
-                x = x.transpose(perm)
-                results.append(x.reshape(t.shape))
+            if t.stream:
+                # (nouter, nred, *blk) -> (ncells, *blk) in C order = the
+                # np.ndindex(*grid) visit order (reduce axes are trailing)
+                results.append(_assemble_blocks(
+                    t, stack.reshape((nouter * nred,) + blk), grid,
+                    t.resolved_index(grid)))
             else:
-                starts = jnp.asarray(_static_starts(t, outer_grid, oidx))
-                out0 = jnp.zeros(t.shape, t.dtype)
-
-                def write(j, acc, stack=stack, starts=starts):
-                    st = [starts[j, k] for k in range(starts.shape[1])]
-                    return lax.dynamic_update_slice(acc, stack[j], st)
-
-                results.append(lax.fori_loop(0, nouter, write, out0))
+                results.append(_assemble_blocks(t, stack, outer_grid,
+                                                spec.outer_index(t)))
         return tuple(results)
 
     return fn
@@ -527,6 +636,19 @@ def _expand_pallas(spec: Spec, defines: SimpleNamespace, interpret: bool):
     def mk_block(t: Tile):
         return pl.BlockSpec(t.resolved_block(), t.resolved_index(grid))
 
+    # Real-TPU pipelining: outer axes are embarrassingly parallel (validated:
+    # each output block is written from exactly one outer cell), reduce axes
+    # carry scratch state and must stay sequential ("arbitrary"). The
+    # interpreter ignores compiler params, so only pass them when compiling.
+    kwargs = {}
+    if not interpret:
+        n_par = len(grid) - len(spec.reduce_axes)
+        sem = ("parallel",) * n_par + ("arbitrary",) * len(spec.reduce_axes)
+        params_cls = getattr(pltpu, "CompilerParams", None) or \
+            getattr(pltpu, "TPUCompilerParams", None)
+        if params_cls is not None:
+            kwargs["compiler_params"] = params_cls(dimension_semantics=sem)
+
     call = pl.pallas_call(
         body_adapter,
         grid=grid,
@@ -535,6 +657,7 @@ def _expand_pallas(spec: Spec, defines: SimpleNamespace, interpret: bool):
         out_shape=[jax.ShapeDtypeStruct(t.shape, t.dtype) for t in spec.outputs],
         scratch_shapes=[pltpu.VMEM(s.shape, s.dtype) for s in spec.scratch],
         interpret=interpret,
+        **kwargs,
     )
 
     def fn(*in_arrays):

@@ -42,6 +42,14 @@ class Memory:
 
     # -- paper listing 9: o_u1.swap(o_u2) ------------------------------------
     def swap(self, other: "Memory") -> None:
+        if not isinstance(other, Memory):
+            raise TypeError(f"swap: expected Memory, got {type(other).__name__}")
+        if other.device is not self.device:
+            # handles from different devices silently swapping would mix
+            # backends (occa: memory belongs to the device that malloc'd it)
+            raise ValueError(
+                f"swap: Memory handles belong to different devices "
+                f"({self.device!r} vs {other.device!r})")
         self._arr, other._arr = other._arr, self._arr
 
     # -- host<->device copies -------------------------------------------------

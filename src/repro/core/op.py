@@ -1,0 +1,298 @@
+"""Declarative op front-end — ``define_op`` (OCCA's host API, unified).
+
+Every public kernel op (matmul, rmsnorm, ssm_scan, flash-attention, ...) is
+ONE ``define_op`` declaration: a kernel-language builder, a pure oracle, and a
+shape->defines derivation. The front-end owns everything the per-op host
+wrappers used to duplicate —
+
+  * backend selection   (``backend="auto"`` -> pallas, interpret off-TPU,
+                         via :func:`repro.core.device.default_device`)
+  * defines derivation  (``derive_defines`` with ``fit_block`` + degradation
+                         guards, per call, cached by the Device kernel cache)
+  * kernel build/cache  (``Device.build_kernel`` — OCCA's runtime compile)
+  * custom-VJP wiring   (an :class:`OpVJP` declaration instead of per-op
+                         ``jax.custom_vjp`` boilerplate)
+  * autotuning          (``op.tune(args)`` sweeps the op's declared knobs,
+                         validates against the oracle, persists winners)
+
+and registers the op in a process-wide registry so tooling (tests, benchmark
+harnesses, serving) can enumerate every op and its oracle.
+
+    matmul = define_op(
+        "matmul", builder=matmul_builder, ref=matmul_ref,
+        derive_defines=_defines, sweep={"bm": [...], "bn": [...]}, ...)
+    c = matmul(a, b)                      # pallas (interpret off-TPU)
+    c = matmul(a, b, backend="loops")     # same kernel source, loops expansion
+    best = matmul.tune((a, b))            # sweep, validate vs ref, cache
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Mapping, Sequence
+
+import jax
+
+from . import tune as _tune
+from .device import default_device
+
+__all__ = ["Op", "OpVJP", "define_op", "get_op", "oracle_vjp",
+           "registered_ops"]
+
+_REGISTRY: dict[str, "Op"] = {}
+
+
+def registered_ops() -> dict[str, "Op"]:
+    """Snapshot of the process-wide op registry (name -> Op)."""
+    return dict(_REGISTRY)
+
+
+def get_op(name: str) -> "Op":
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no op named {name!r} registered; known: {sorted(_REGISTRY)}") from None
+
+
+class OpVJP:
+    """Custom-VJP declaration for a :func:`define_op` op.
+
+    ``bwd(params, residuals, cotangent) -> per-primal-arg cotangents`` is the
+    only required piece. ``residuals(outs, args, params)`` selects what the
+    backward needs (default: the primal args); ``outs`` is the FULL kernel
+    output tuple, so residual-only outputs (flash-attention's lse) are
+    available even though callers never see them."""
+
+    def __init__(self, bwd: Callable, residuals: Callable | None = None):
+        self.bwd = bwd
+        self.residuals = residuals or (lambda outs, args, params: args)
+
+
+def oracle_vjp(ref_fn: Callable, *, params: Sequence[str] = ()) -> OpVJP:
+    """An :class:`OpVJP` that differentiates the op's reference oracle.
+
+    The forward runs the kernel; the backward is ``jax.vjp`` through
+    ``ref_fn(*primals, **{k: params[k] for k in params})`` — correct whenever
+    the kernel and the oracle compute the same function (which the test suite
+    asserts), without writing a backward kernel."""
+
+    def bwd(call_params, res, g):
+        kw = {k: call_params[k] for k in params if k in call_params}
+        _, pullback = jax.vjp(lambda *xs: ref_fn(*xs, **kw), *res)
+        return pullback(g)
+
+    return OpVJP(bwd=bwd)
+
+
+def _freeze(params: Mapping) -> tuple:
+    return tuple(sorted(params.items()))
+
+
+def _thaw(frozen: tuple) -> dict:
+    return dict(frozen)
+
+
+class Op:
+    """A declared op: the public callable returned by :func:`define_op`.
+
+    Hook signatures (all take/return plain tuples + a mutable params dict):
+
+      early(args, params)        -> result or None   shape short-circuits
+      pre(args, params)          -> kernel args      host-side arg prep
+                                                     (may pop params it eats)
+      derive_defines(args, params) -> defines dict   shapes -> addDefine set
+      post(outs, args, params)   -> public result    host-side output shaping
+                                                     (default: single output
+                                                     unwrapped, tuple kept)
+
+    ``args`` for ``post``/``OpVJP`` hooks are the ORIGINAL call args (pre is
+    kernel-facing only). ``public_outputs`` exposes just the first n kernel
+    outputs (the rest are residual-only, e.g. softmax stats)."""
+
+    def __init__(self, name, builder, ref, derive_defines, *, vjp=None,
+                 sweep=None, defaults=None, public_outputs=None,
+                 early=None, pre=None, post=None, ref_params=(),
+                 tune_ref=None, example=None, doc=None, array_params=()):
+        self.name = name
+        self.builder = builder
+        self.ref = ref
+        self.derive_defines = derive_defines
+        self.vjp = vjp
+        self.sweep = dict(sweep or {})
+        self.defaults = dict(defaults or {})
+        self.array_params = tuple(array_params)
+        self.public_outputs = public_outputs
+        self.ref_params = tuple(ref_params)
+        self.tune_ref = tune_ref
+        self.example = example
+        self._early = early
+        self._pre = pre
+        self._post = post
+        self.__doc__ = doc or (ref.__doc__ if ref is not None else None)
+        self.__name__ = name
+        if vjp is not None:
+            self._core = self._build_vjp_core()
+
+    # -- call plumbing -------------------------------------------------------
+    def _resolve(self, kw: Mapping) -> tuple[str, bool | None, dict]:
+        unknown = (set(kw) - set(self.defaults) - set(self.array_params)
+                   - {"backend", "interpret"})
+        if unknown:
+            raise TypeError(
+                f"op {self.name!r} got unexpected params {sorted(unknown)}; "
+                f"known: {sorted(set(self.defaults) | set(self.array_params))} "
+                "(+ backend, interpret)")
+        params = dict(self.defaults)
+        params.update(dict.fromkeys(self.array_params))
+        params.update(kw)
+        backend = params.pop("backend", "auto")
+        interpret = params.pop("interpret", None)
+        if backend == "auto":
+            backend = "pallas"
+        return backend, interpret, params
+
+    def _run_kernel(self, args, backend, interpret, params) -> tuple:
+        """derive -> build (Device kernel cache) -> run; ALL kernel outputs."""
+        params = dict(params)
+        if self._pre is not None:
+            args = tuple(self._pre(tuple(args), params))
+        defines = self.derive_defines(tuple(args), params)
+        kern = default_device(backend, interpret).build_kernel(
+            self.builder, defines)
+        return kern.run(*args)
+
+    def _publish(self, outs, args, params):
+        pub = outs if self.public_outputs is None else outs[: self.public_outputs]
+        if self._post is not None:
+            return self._post(pub, args, params)
+        return pub[0] if len(pub) == 1 else pub
+
+    def _primal(self, args, backend, interpret, params):
+        outs = self._run_kernel(args, backend, interpret, params)
+        return self._publish(outs, args, params), outs
+
+    def _build_vjp_core(self):
+        vjp = self.vjp
+
+        @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+        def core(frozen, *args):
+            backend, interpret, params = self._resolve(_thaw(frozen))
+            return self._primal(args, backend, interpret, params)[0]
+
+        def core_fwd(frozen, *args):
+            backend, interpret, params = self._resolve(_thaw(frozen))
+            result, outs = self._primal(args, backend, interpret, params)
+            return result, vjp.residuals(outs, args, params)
+
+        def core_bwd(frozen, res, g):
+            _, interpret, params = self._resolve(_thaw(frozen))
+            params["interpret"] = interpret
+            return tuple(vjp.bwd(params, res, g))
+
+        core.defvjp(core_fwd, core_bwd)
+        return core
+
+    def __call__(self, *args, **kw):
+        backend, interpret, params = self._resolve(kw)
+        if self._early is not None:
+            got = self._early(args, dict(params))
+            if got is not None:
+                return got
+        if self.vjp is not None:
+            # array-valued params cannot thread through custom_vjp's static
+            # (nondiff) param tuple — reject loudly rather than freeze a
+            # tracer or silently drop the value from the backward pass
+            live = [n for n in self.array_params if params.get(n) is not None]
+            if live:
+                raise ValueError(
+                    f"op {self.name!r}: params {live} take arrays and are not "
+                    "differentiable through the public op; use the functional "
+                    f"entry point ({self.name}.raw / its wrapper) instead")
+            for n in self.array_params:
+                params.pop(n, None)
+            return self._core(
+                _freeze(dict(params, backend=backend, interpret=interpret)),
+                *args)
+        return self._primal(args, backend, interpret, params)[0]
+
+    def raw(self, *args, **kw):
+        """Run the kernel and return ALL its outputs (no VJP, no post/early):
+        the functional entry point for tests and composition."""
+        backend, interpret, params = self._resolve(kw)
+        return self._run_kernel(args, backend, interpret, params)
+
+    # -- oracle access -------------------------------------------------------
+    def reference(self, *args, **kw):
+        """The op's oracle at public-call granularity (backend-independent)."""
+        _, _, params = self._resolve(kw)
+        return self.ref(*args, **{k: params[k] for k in self.ref_params
+                                  if k in params})
+
+    # -- autotuning ----------------------------------------------------------
+    def tune(self, args, *, sweep=None, cache=True, warmup=1, repeats=3,
+             validate=True, **kw):
+        """Sweep this op's tuning knobs on real args; returns the winning
+        defines (a :class:`repro.core.tune.TuneResult`).
+
+        Sweeps are over DEFINES keys (the builder's addDefine surface).
+        Candidates validate against the op's oracle — not against each other.
+        Winners persist under ``$REPRO_CACHE_DIR`` (``cache=False`` opts out):
+        a warm cache performs zero builds and zero timed sweeps."""
+        backend, interpret, params = self._resolve(kw)
+        params = dict(params)
+        run_args = tuple(self._pre(tuple(args), params)) if self._pre else tuple(args)
+        defines = self.derive_defines(run_args, params)
+        sweep = dict(self.sweep if sweep is None else sweep)
+        if not sweep:
+            raise ValueError(f"op {self.name!r} declares no tuning sweep")
+        # lazy: autotune evaluates the oracle only after a cache miss, so a
+        # warm cache pays neither sweep timings nor the reference forward
+        ref = None
+        if validate:
+            tref = self.tune_ref
+            if tref is not None:
+                ref = lambda *a: tref(run_args, params)  # noqa: E731
+            elif self.ref is not None:
+                kwf = {k: params[k] for k in self.ref_params if k in params}
+                ref = lambda *a: self.ref(*a, **kwf)  # noqa: E731
+        return _tune.autotune(
+            default_device(backend, interpret), self.builder, defines,
+            sweep=sweep, args=run_args, warmup=warmup, repeats=repeats,
+            validate=validate, ref=ref, cache=cache, name=self.name)
+
+    def __repr__(self):
+        return (f"Op({self.name!r}, params={sorted(self.defaults)}, "
+                f"sweep={sorted(self.sweep)}, vjp={self.vjp is not None})")
+
+
+def define_op(name: str, *, builder: Callable, ref: Callable | None,
+              derive_defines: Callable, vjp: OpVJP | None = None,
+              sweep: Mapping | None = None, defaults: Mapping | None = None,
+              public_outputs: int | None = None, early: Callable | None = None,
+              pre: Callable | None = None, post: Callable | None = None,
+              ref_params: Sequence[str] = (), tune_ref: Callable | None = None,
+              example: Callable | None = None, doc: str | None = None,
+              array_params: Sequence[str] = (), register: bool = True) -> Op:
+    """Declare a public op over the unified kernel language; see :class:`Op`.
+
+    ``example(rng) -> (args, params)`` supplies representative inputs so the
+    registry-wide portability test can sweep every op across all backends
+    against its ``ref`` without op-specific test code. ``array_params`` names
+    params that may hold arrays (e.g. a carried state ``h0``): they are legal
+    on the functional ``op.raw``/``op.tune`` paths but rejected on the
+    differentiable call (arrays cannot be static custom_vjp params)."""
+    op = Op(name, builder, ref, derive_defines, vjp=vjp, sweep=sweep,
+            defaults=defaults, public_outputs=public_outputs, early=early,
+            pre=pre, post=post, ref_params=ref_params, tune_ref=tune_ref,
+            example=example, doc=doc, array_params=array_params)
+    if register:
+        # silent overwrites are the same collision class the PR-1 kernel-cache
+        # fix eliminated: callers holding the first Op would diverge from the
+        # registry with no error
+        if name in _REGISTRY:
+            raise ValueError(
+                f"an op named {name!r} is already registered; pick a unique "
+                "name or pass register=False to keep it out of the registry")
+        _REGISTRY[name] = op
+    return op

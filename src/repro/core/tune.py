@@ -6,28 +6,101 @@ device, time each candidate, cache the winner.
                     sweep={"bh": [16, 32, 64, 128]},
                     args=(u1, u2))
     kernel = device.build_kernel(fd2d_builder, best)
+
+Winners persist across processes (OCCA's on-disk kernel cache analogue):
+``autotune(..., cache=True)`` stores the best sweep values as JSON under
+``$REPRO_CACHE_DIR`` (default ``~/.cache/repro-occa/``), keyed by
+(op/builder name, the non-swept defines, backend, device kind, jax version).
+A warm cache returns immediately — zero builds, zero timed sweeps.
 """
 
 from __future__ import annotations
 
+import hashlib
 import itertools
+import json
+import os
+import pathlib
 import time
 
 import jax
 
-__all__ = ["autotune", "TuneResult"]
+__all__ = ["autotune", "TuneResult", "tune_cache_dir", "tune_cache_key"]
+
+
+def tune_cache_dir() -> pathlib.Path:
+    return pathlib.Path(os.environ.get(
+        "REPRO_CACHE_DIR", os.path.expanduser("~/.cache/repro-occa")))
+
+
+def _device_kind() -> str:
+    try:
+        return jax.devices()[0].device_kind
+    except Exception:
+        return jax.default_backend()
+
+
+def tune_cache_key(name: str, defines: dict, sweep: dict, backend: str,
+                   interpret: bool = False) -> tuple:
+    """(digest, payload): the persistent-cache identity of one tuning problem.
+
+    Swept keys are excluded from the defines — they are the tuning *output* —
+    but the CANDIDATE SETS are part of the identity (a narrower sweep is a
+    different tuning problem: its cached winner must not come from values the
+    caller excluded). Everything else a winner could depend on (shape/dtype
+    defines, backend, interpret mode, device kind, jax version) is in.
+    Interpret mode matters: interpreter wall-times are unrelated to compiled
+    TPU performance, so a debug sweep must never answer for the compiled
+    path."""
+    base = {k: v for k, v in sorted(defines.items()) if k not in sweep}
+    payload = dict(op=name, defines={k: repr(v) for k, v in base.items()},
+                   sweep={k: [repr(v) for v in sweep[k]] for k in sorted(sweep)},
+                   backend=backend, interpret=bool(interpret),
+                   device_kind=_device_kind(), jax_version=jax.__version__)
+    digest = hashlib.sha256(
+        json.dumps(payload, sort_keys=True).encode()).hexdigest()[:24]
+    return digest, payload
+
+
+def _cache_load(digest: str):
+    path = tune_cache_dir() / "autotune" / f"{digest}.json"
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def _cache_store(digest: str, payload: dict, winner: dict, best_seconds: float):
+    root = tune_cache_dir() / "autotune"
+    try:
+        root.mkdir(parents=True, exist_ok=True)
+        tmp = root / f".{digest}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(dict(payload, winner=winner, best_seconds=best_seconds),
+                      f, indent=1, sort_keys=True)
+        os.replace(tmp, root / f"{digest}.json")
+    except OSError:
+        pass  # cache is an optimization; never fail the tune over it
 
 
 class TuneResult(dict):
     """The winning defines; ``.trials`` holds (defines, seconds) for all
     candidates, ``.best_seconds`` the winning time, ``.skipped`` the
-    (defines, reason) pairs rejected at build time (invalid tilings)."""
+    (defines, reason) pairs rejected at build time (invalid tilings), and
+    ``.cached`` whether the result came from the persistent cache (in which
+    case ``.trials`` is empty — nothing was re-timed)."""
 
-    def __init__(self, best_defines, trials, skipped=()):
+    def __init__(self, best_defines, trials, skipped=(), best_seconds=None,
+                 cached=False):
         super().__init__(best_defines)
-        self.trials = trials
-        self.best_seconds = min(t for _, t in trials)
+        self.trials = list(trials)
+        if best_seconds is None:
+            timed = [t for _, t in self.trials if t < float("inf")]
+            best_seconds = min(timed) if timed else float("nan")
+        self.best_seconds = best_seconds
         self.skipped = list(skipped)
+        self.cached = cached
 
 
 def _time_once(kernel, args, *, warmup=1, repeats=3):
@@ -39,7 +112,9 @@ def _time_once(kernel, args, *, warmup=1, repeats=3):
     if out is not None:  # warmup=0: nothing dispatched yet, nothing to block on
         jax.block_until_ready(out)
     best = float("inf")
-    for _ in range(repeats):
+    # repeats=0 used to leave best == inf (TuneResult.best_seconds == inf and
+    # every candidate ranked equal); always take at least one timed dispatch.
+    for _ in range(max(1, repeats)):
         t0 = time.perf_counter()
         out = kernel.run(*args)
         jax.block_until_ready(out)
@@ -47,21 +122,49 @@ def _time_once(kernel, args, *, warmup=1, repeats=3):
     return best, out
 
 
+def _as_output_tuple(x):
+    return tuple(x) if isinstance(x, (tuple, list)) else (x,)
+
+
 def autotune(device, builder, defines: dict, *, sweep: dict, args,
-             warmup: int = 1, repeats: int = 3, validate: bool = True):
+             warmup: int = 1, repeats: int = 3, validate: bool = True,
+             ref=None, cache: bool = False, name: str | None = None):
     """Grid-search ``sweep`` (name -> candidate values) over ``defines``.
 
     Invalid candidates (non-dividing blocks etc.) are skipped via the
     Spec validation errors. With ``validate=True`` every candidate's output
-    is checked against the first valid candidate (tuning must not change
-    results — the paper's correctness-portability contract).
+    is checked against ``ref`` — an independent oracle, either a callable
+    ``ref(*args)`` or precomputed output arrays — when one is given; without
+    a ref, candidates are cross-checked against the first valid candidate
+    (tuning must not change results — the paper's correctness-portability
+    contract — but a bug shared with the first candidate self-certifies,
+    so declare a ref whenever one exists).
+
+    ``cache=True`` consults/updates the persistent winner cache under
+    ``$REPRO_CACHE_DIR`` before sweeping; ``name`` keys the cache entry
+    (defaults to the builder's qualname).
     """
     import numpy as np
 
     names = sorted(sweep)
+    name = name or getattr(builder, "__qualname__", repr(builder))
+    if cache:
+        digest, payload = tune_cache_key(name, defines, sweep, device.backend,
+                                         getattr(device, "interpret", False))
+        hit = _cache_load(digest)
+        if hit is not None and all(n in hit.get("winner", {}) for n in names):
+            winner = {n: hit["winner"][n] for n in names}
+            return TuneResult(dict(defines, **winner), trials=[],
+                              best_seconds=hit.get("best_seconds", float("nan")),
+                              cached=True)
+
+    reference = None
+    if validate and ref is not None:
+        out = ref(*args) if callable(ref) else ref
+        reference = [np.asarray(o) for o in _as_output_tuple(out)]
+
     trials = []
     skipped = []
-    reference = None
     for combo in itertools.product(*(sweep[n] for n in names)):
         cand = dict(defines, **dict(zip(names, combo)))
         try:
@@ -70,15 +173,18 @@ def autotune(device, builder, defines: dict, *, sweep: dict, args,
             skipped.append((cand, str(e)))  # invalid tiling for this shape
             continue
         sec, raw = _time_once(kernel, args, warmup=warmup, repeats=repeats)
-        if validate and raw is not None:  # raw is None only when warmup=repeats=0
+        if validate and raw is not None:
             out = [np.asarray(o) for o in raw]
             if reference is None:
-                reference = out
+                reference = out  # no oracle declared: first-candidate fallback
             else:
                 for a, b in zip(out, reference):
                     np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
         trials.append((cand, sec))
     if not trials:
         raise ValueError("no valid candidate in the sweep")
-    best = min(trials, key=lambda t: t[1])[0]
-    return TuneResult(best, trials, skipped)
+    best, best_sec = min(trials, key=lambda t: t[1])
+    result = TuneResult(best, trials, skipped, best_seconds=best_sec)
+    if cache:
+        _cache_store(digest, payload, {n: best[n] for n in names}, best_sec)
+    return result

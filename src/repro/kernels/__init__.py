@@ -1,11 +1,14 @@
 """Kernels for the LM hot-spots.
 
-Each kernel ships with ``kernel.py``, ``ops.py`` (jitted wrapper + custom
-VJP where needed) and ``ref.py`` (pure-jnp oracle), validated against the
-oracle in interpret mode across shape/dtype sweeps. ``flash_attention`` and
-``ssm_scan`` are hand-tiled ``pl.pallas_call`` kernels; ``rmsnorm`` and
-``matmul`` are written once in the unified kernel language
-(``repro.core.lang``) and expand to every backend.
+Each kernel ships with ``kernel.py`` (the unified-language builder),
+``ops.py`` (a single ``define_op`` declaration — the front-end owns backend
+selection, defines derivation, kernel caching, VJP wiring and autotuning)
+and ``ref.py`` (pure-jnp oracle), validated against the oracle across
+backends and shape/dtype sweeps. ``matmul``, ``rmsnorm``, ``ssm_scan`` and
+the flash-attention FORWARD are written once in the unified kernel language
+(``repro.core.lang``) and expand to every backend; flash-attention's
+backward and single-token decode remain hand-tiled ``pl.pallas_call``
+kernels (ROADMAP: port next).
 """
 
 from . import flash_attention, matmul, rmsnorm, ssm_scan  # noqa: F401

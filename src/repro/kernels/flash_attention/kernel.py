@@ -1,11 +1,17 @@
-"""Blocked online-softmax attention (FlashAttention) as a Pallas TPU kernel.
+"""Blocked online-softmax attention (FlashAttention) in the unified language.
 
 TPU adaptation (DESIGN.md §2): work-groups -> grid cells holding one
-(block_q x head_dim) query tile in VMEM; the kv dimension is the innermost
-grid axis so the softmax running state (m, l, acc) lives in VMEM scratch and
-persists across sequential grid steps — the TPU realization of the CUDA
+(block_q x head_dim) query tile in VMEM; the kv dimension is the trailing
+*reduce* axis so the softmax running state (m, l, acc) lives in VMEM scratch
+and persists across sequential grid steps — the TPU realization of the CUDA
 flash-attention inner loop. Causal/sliding-window blocks that are fully
-masked are skipped with ``pl.when`` (no MXU work issued).
+masked are skipped whole with ``ctx.cell_when`` (no MXU work issued on
+pallas; a ``lax.cond`` skip on the functional expansions).
+
+The FORWARD is one kernel source (``flash_fwd_builder``) expanding to
+jnp/loops/pallas — its former bespoke ``pl.pallas_call`` is gone; the host
+path lives in the ``define_op`` declaration in ``ops.py``. The backward and
+single-token decode remain hand-tiled Pallas kernels (ROADMAP: port bwd next).
 """
 
 from __future__ import annotations
@@ -15,121 +21,115 @@ import math
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["flash_attention_fwd", "flash_attention_bwd", "flash_decode"]
+from repro.core import Scratch, Spec, Tile
+
+__all__ = ["flash_fwd_builder", "flash_attention_bwd", "flash_decode"]
 
 _NEG_INF = float("-inf")
 
 
-def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
-                sm_scale, causal, window, prefix_len, block_q, block_kv,
-                q_offset, nk):
-    qi = pl.program_id(2)
-    ki = pl.program_id(3)
+def flash_fwd_builder(D):
+    """q: (b, h, sq, d); k: (b, hk, skv, d); v: (b, hk, skv, dv) ->
+    o: (b, h, sq, dv), lse: (b, h, sq) f32 (softmax stats for the backward).
 
-    @pl.when(ki == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-
-    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset
-    k_pos = ki * block_kv + jax.lax.iota(jnp.int32, block_kv)
-
-    # whole-block skip: strictly-above-diagonal (causal) or out-of-window
-    run = jnp.bool_(True)
-    if causal:
-        run &= (ki * block_kv) <= (qi * block_q + q_offset + block_q - 1)
-    if window is not None:
-        run &= (qi * block_q + q_offset) - (ki * block_kv + block_kv - 1) < window
-    if prefix_len:
-        run |= (ki * block_kv) < prefix_len   # prefix keys always visible
-
-    @pl.when(run)
-    def _step():
-        q = q_ref[0, 0].astype(jnp.float32)          # (block_q, d)
-        k = k_ref[0, 0].astype(jnp.float32)          # (block_kv, d)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * sm_scale
-        mask = jnp.ones((block_q, block_kv), dtype=bool)
-        if causal:
-            mask &= q_pos[:, None] >= k_pos[None, :]
-        if window is not None:
-            mask &= (q_pos[:, None] - k_pos[None, :]) < window
-        if prefix_len:
-            mask |= jnp.broadcast_to(k_pos[None, :] < prefix_len, mask.shape)
-        s = jnp.where(mask, s, _NEG_INF)
-
-        m_prev = m_scr[:, :1]                         # (block_q, 1)
-        l_prev = l_scr[:, :1]
-        m_cur = jnp.maximum(m_prev, s.max(-1, keepdims=True))
-        # correction for fully-masked history (m_prev == -inf): acc is 0 there
-        corr = jnp.where(m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_cur))
-        p = jnp.exp(s - m_cur)
-        p = jnp.where(mask, p, 0.0)                   # kills -inf - -inf NaNs
-        v = v_ref[0, 0].astype(jnp.float32)
-        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-        l_scr[:, :1] = l_prev * corr + p.sum(-1, keepdims=True)
-        m_scr[:, :1] = m_cur
-
-    @pl.when(ki == nk - 1)
-    def _fin():
-        l = l_scr[:, :1]
-        o_ref[0, 0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
-        # log-sum-exp per query row (softmax stats for the backward kernel)
-        lse_ref[0, 0] = (m_scr[:, 0] + jnp.log(jnp.where(l[:, 0] == 0.0, 1.0,
-                                                         l[:, 0])))
-
-
-def flash_attention_fwd(q, k, v, *, causal=True, window=None, sm_scale=None,
-                        prefix_len=0, block_q=128, block_kv=128, interpret=True):
-    """q: (B, H, Sq, Dqk); k: (B, Hk, Skv, Dqk); v: (B, Hk, Skv, Dv).
-
-    Returns ((B, H, Sq, Dv), lse (B, H, Sq) f32). Dv may differ from Dqk."""
-    b, h, sq, d = q.shape
-    _, hk, skv, _ = k.shape
-    dv = v.shape[-1]
-    assert h % hk == 0, (h, hk)
+    Grid (b, h, nq, nk) with nk the sequential reduce axis; m/l/acc running
+    state in scratch, init under ``is_first``, flushed under ``is_last``;
+    fully-masked (q, kv)-blocks are ``cell_when``-skipped."""
+    b, h, hk = D.b, D.h, D.hk
+    sq, skv, d, dv = D.sq, D.skv, D.d, D.dv
+    bq, bkv = D.block_q, D.block_kv
+    causal, window, prefix = D.causal, D.window, D.prefix_len
+    sm_scale = D.sm_scale
     g = h // hk
-    block_q = min(block_q, sq)
-    block_kv = min(block_kv, skv)
-    assert sq % block_q == 0 and skv % block_kv == 0, (sq, block_q, skv, block_kv)
-    if sm_scale is None:
-        sm_scale = 1.0 / math.sqrt(d)
-    nq, nk = sq // block_q, skv // block_kv
     q_offset = skv - sq  # queries aligned to the end of the kv stream
+    dtype = jnp.dtype(D.dtype)
 
-    kernel = functools.partial(
-        _fwd_kernel, sm_scale=sm_scale, causal=causal, window=window,
-        prefix_len=prefix_len, block_q=block_q, block_kv=block_kv,
-        q_offset=q_offset, nk=nk)
+    def body(ctx, q_ref, k_ref, v_ref, o_ref, lse_ref):
+        m_scr, l_scr, acc_scr = ctx.scratch
+        qi = ctx.outer_id(2)
+        ki = ctx.reduce_id(0)
 
-    return pl.pallas_call(
-        kernel,
-        grid=(b, h, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
-            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
-            pl.BlockSpec((1, 1, block_kv, dv), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+        @ctx.when(ctx.is_first)
+        def _init():
+            m_scr[...] = jnp.full(m_scr.shape, _NEG_INF, jnp.float32)
+            l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+            acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+        # whole-block skip: strictly-above-diagonal (causal) or out-of-window
+        run = jnp.bool_(True)
+        if causal:
+            run &= (ki * bkv) <= (qi * bq + q_offset + bq - 1)
+        if window is not None:
+            run &= (qi * bq + q_offset) - (ki * bkv + bkv - 1) < window
+        if prefix:
+            run |= (ki * bkv) < prefix   # prefix keys always visible
+
+        @ctx.cell_when(run)
+        def _step():
+            q_pos = qi * bq + lax.iota(jnp.int32, bq) + q_offset
+            k_pos = ki * bkv + lax.iota(jnp.int32, bkv)
+            q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+            k = k_ref[0, 0].astype(jnp.float32)          # (bkv, d)
+            s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+            mask = jnp.ones((bq, bkv), dtype=bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            if prefix:
+                mask |= jnp.broadcast_to(k_pos[None, :] < prefix, mask.shape)
+            s = jnp.where(mask, s, _NEG_INF)
+
+            m_prev = m_scr[:, :1]                         # (bq, 1)
+            l_prev = l_scr[:, :1]
+            m_cur = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+            # correction for fully-masked history (m_prev == -inf): acc is 0
+            corr = jnp.where(m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_cur))
+            p = jnp.exp(s - m_cur)
+            p = jnp.where(mask, p, 0.0)                   # kills -inf - -inf NaNs
+            v = v_ref[0, 0].astype(jnp.float32)
+            acc_scr[...] = acc_scr[...] * corr + lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            l_scr[:, :1] = l_prev * corr + p.sum(-1, keepdims=True)
+            m_scr[:, :1] = m_cur
+
+        @ctx.when(ctx.is_last)
+        def _fin():
+            l = l_scr[:, :1]
+            o_ref[0, 0] = (acc_scr[...] /
+                           jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+            # log-sum-exp per query row (softmax stats for the backward kernel)
+            lse_ref[0, 0] = (m_scr[:, 0] +
+                             jnp.log(jnp.where(l[:, 0] == 0.0, 1.0, l[:, 0])))
+
+    return Spec(
+        "flash_attention_fwd",
+        grid=(b, h, sq // bq, skv // bkv),
+        reduce_axes=(3,),
+        scratch=[Scratch((bq, 128), jnp.float32),   # m (lane-replicated col 0)
+                 Scratch((bq, 128), jnp.float32),   # l
+                 Scratch((bq, dv), jnp.float32)],   # acc
+        inputs=[
+            Tile("q", (b, h, sq, d), dtype, block=(1, 1, bq, d),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            Tile("k", (b, hk, skv, d), dtype, block=(1, 1, bkv, d),
+                 index=lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+            Tile("v", (b, hk, skv, dv), dtype, block=(1, 1, bkv, dv),
+                 index=lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, 1, block_q, dv), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
-            pl.BlockSpec((1, 1, block_q), lambda b_, h_, qi, ki: (b_, h_, qi)),
+        outputs=[
+            Tile("o", (b, h, sq, dv), dtype, block=(1, 1, bq, dv),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            Tile("lse", (b, h, sq), jnp.float32, block=(1, 1, bq),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi)),
         ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, h, sq, dv), q.dtype),
-            jax.ShapeDtypeStruct((b, h, sq), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_q, 128), jnp.float32),   # m (lane-replicated col 0)
-            pltpu.VMEM((block_q, 128), jnp.float32),   # l
-            pltpu.VMEM((block_q, dv), jnp.float32),    # acc
-        ],
-        interpret=interpret,
-    )(q, k, v)
+        body=body)
 
 
 def _decode_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,

@@ -1,54 +1,122 @@
-"""Jitted public wrappers for flash attention with a custom VJP.
+"""Public flash-attention op — a ``define_op`` declaration.
 
-Forward and backward both run Pallas kernels (interpret-mode on CPU,
-compiled on TPU). No O(S^2) residuals are saved — only (q, k, v, o, lse);
-the backward kernels recompute p blockwise from the lse stats.
+The forward runs the unified-language kernel (``flash_fwd_builder``) on any
+backend; the backward is the hand-tiled Pallas kernel pair (dq / dkv) wired
+through the front-end's VJP declaration. No O(S^2) residuals are saved —
+only (q, k, v, o, lse); the backward recomputes p blockwise from the lse
+stats. ``decode_attention`` stays a bespoke single-token kernel (no grad
+needed at serving time).
 """
 
 from __future__ import annotations
 
-import functools
+import math
 
 import jax
+import jax.numpy as jnp
 
-from .kernel import flash_attention_bwd, flash_attention_fwd, flash_decode
-from .ref import decode_ref, mha_ref
+from repro.core import OpVJP, define_op, fit_block
+from .kernel import flash_attention_bwd, flash_decode, flash_fwd_builder
+from .ref import mha_ref
 
-__all__ = ["flash_attention", "decode_attention"]
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
-def _flash(q, k, v, causal, window, sm_scale, prefix_len, block_q, block_kv):
-    o, _ = flash_attention_fwd(q, k, v, causal=causal, window=window,
-                               sm_scale=sm_scale, prefix_len=prefix_len,
-                               block_q=block_q, block_kv=block_kv)
-    return o
+__all__ = ["flash_attention", "decode_attention", "flash_attention_fwd"]
 
 
-def _flash_fwd(q, k, v, causal, window, sm_scale, prefix_len, block_q, block_kv):
-    o, lse = flash_attention_fwd(q, k, v, causal=causal, window=window,
-                                 sm_scale=sm_scale, prefix_len=prefix_len,
-                                 block_q=block_q, block_kv=block_kv)
-    return o, (q, k, v, o, lse)
+def _defines(args, params):
+    q, k, v = args
+    b, h, sq, d = q.shape
+    _, hk, skv, _ = k.shape
+    dv = v.shape[-1]
+    if h % hk:
+        raise ValueError(f"flash_attention: {h} query heads not a multiple of "
+                         f"{hk} kv heads")
+    if q.dtype != k.dtype or q.dtype != v.dtype:
+        raise ValueError(f"flash_attention: dtypes disagree "
+                         f"({q.dtype}/{k.dtype}/{v.dtype})")
+    block_q, block_kv = params["block_q"], params["block_kv"]
+    bq, bkv = fit_block(block_q, sq), fit_block(block_kv, skv)
+    ncells = b * h * (sq // bq) * (skv // bkv)
+    degraded = bq < min(block_q, sq) or bkv < min(block_kv, skv)
+    if degraded and ncells > 1 << 16:
+        raise ValueError(
+            f"flash_attention: seq lens ({sq}, {skv}) degraded blocks to "
+            f"({bq}, {bkv}) = {ncells} grid cells; pad the sequences or pass "
+            "block sizes that divide them")
+    sm_scale = params["sm_scale"]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    window = params["window"]
+    return dict(
+        b=b, h=h, hk=hk, sq=sq, skv=skv, d=d, dv=dv,
+        block_q=bq, block_kv=bkv,
+        causal=bool(params["causal"]),
+        window=None if window is None else int(window),
+        prefix_len=int(params["prefix_len"]),
+        sm_scale=float(sm_scale),
+        dtype=jnp.dtype(q.dtype).name)
 
 
-def _flash_bwd(causal, window, sm_scale, prefix_len, block_q, block_kv, res, g):
+def _residuals(outs, args, params):
+    o, lse = outs
+    q, k, v = args
+    return q, k, v, o, lse
+
+
+def _bwd(params, res, g):
     q, k, v, o, lse = res
-    return flash_attention_bwd(q, k, v, o, g, lse, causal=causal,
-                               window=window, sm_scale=sm_scale,
-                               prefix_len=prefix_len, block_q=block_q,
-                               block_kv=block_kv)
+    interpret = params.get("interpret")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    # re-derive through _defines so fwd and bwd share ONE fitting policy
+    # (block sizes, sm_scale default) — the raw requested blocks may not
+    # divide the sequence lengths
+    D = _defines((q, k, v), params)
+    return flash_attention_bwd(
+        q, k, v, o, g, lse, causal=D["causal"], window=D["window"],
+        sm_scale=D["sm_scale"], prefix_len=D["prefix_len"],
+        block_q=D["block_q"], block_kv=D["block_kv"], interpret=interpret)
 
 
-_flash.defvjp(_flash_fwd, _flash_bwd)
+def _tune_ref(args, params):
+    q, k, v = args
+    kw = {k_: params[k_] for k_ in ("causal", "window", "sm_scale", "prefix_len")}
+    return mha_ref(q, k, v, **kw)  # validates o; lse has no oracle here
 
 
-def flash_attention(q, k, v, *, causal=True, window=None, sm_scale=None,
-                    prefix_len=0, block_q=128, block_kv=128):
-    """Differentiable flash attention. q (B,H,Sq,Dqk), k (B,Hk,Skv,Dqk),
-    v (B,Hk,Skv,Dv)."""
-    return _flash(q, k, v, causal, window, sm_scale, prefix_len, block_q,
-                  block_kv)
+def _example(rng):
+    q = rng.randn(1, 4, 64, 32).astype("float32")
+    k = rng.randn(1, 2, 64, 32).astype("float32")
+    v = rng.randn(1, 2, 64, 32).astype("float32")
+    return (q, k, v), dict(causal=True, block_q=32, block_kv=32)
+
+
+flash_attention = define_op(
+    "flash_attention",
+    builder=flash_fwd_builder,
+    ref=mha_ref,
+    derive_defines=_defines,
+    vjp=OpVJP(bwd=_bwd, residuals=_residuals),
+    public_outputs=1,                       # lse is residual-only
+    defaults=dict(causal=True, window=None, sm_scale=None, prefix_len=0,
+                  block_q=128, block_kv=128),
+    ref_params=("causal", "window", "sm_scale", "prefix_len"),
+    tune_ref=_tune_ref,
+    sweep=dict(block_q=[64, 128, 256, 512], block_kv=[64, 128, 256, 512]),
+    example=_example,
+    doc="""Differentiable flash attention. q (B,H,Sq,Dqk), k (B,Hk,Skv,Dqk),
+    v (B,Hk,Skv,Dv); supports GQA/MQA, causal, sliding-window and prefix-LM
+    masking. One unified-language forward, hand-tiled Pallas backward.""",
+)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=None, sm_scale=None,
+                        prefix_len=0, block_q=128, block_kv=128,
+                        backend="auto", interpret=None):
+    """Forward + lse stats (functional; the op's full kernel output)."""
+    return flash_attention.raw(
+        q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+        prefix_len=prefix_len, block_q=block_q, block_kv=block_kv,
+        backend=backend, interpret=interpret)
 
 
 def decode_attention(q, k, v, *, window=None, sm_scale=None, block_kv=512):

@@ -1,25 +1,33 @@
-"""Public blocked-matmul op over the unified kernel language."""
+"""Public blocked-matmul op — a single ``define_op`` declaration."""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import default_device, fit_block
+from repro.core import define_op, fit_block
 from .kernel import matmul_builder
+from .ref import matmul_ref
 
 __all__ = ["matmul"]
 
 
-def matmul(a, b, *, block_m=128, block_n=128, block_k=128, backend="pallas",
-           out_dtype=None):
-    """a: (M, K) @ b: (K, N) with f32 accumulation across a reduce axis."""
+def _early(args, params):
+    a, b = args
     (m, k), (k2, n) = a.shape, b.shape
     if k != k2:
         raise ValueError(f"matmul: inner dims disagree ({k} vs {k2})")
     if a.dtype != b.dtype:
         raise ValueError(f"matmul: dtypes disagree ({a.dtype} vs {b.dtype})")
     if m == 0 or n == 0 or k == 0:  # nothing to tile; K==0 contracts to zeros
-        return jnp.zeros((m, n), jnp.dtype(out_dtype or a.dtype))
+        return jnp.zeros((m, n), jnp.dtype(params["out_dtype"] or a.dtype))
+    return None
+
+
+def _defines(args, params):
+    a, b = args
+    (m, k), (_, n) = a.shape, b.shape
+    block_m, block_n, block_k = (params["block_m"], params["block_n"],
+                                 params["block_k"])
     bm, bk, bn = fit_block(block_m, m), fit_block(block_k, k), fit_block(block_n, n)
     ncells = (m // bm) * (n // bn) * (k // bk)
     degraded = (bm < min(block_m, m) or bk < min(block_k, k)
@@ -33,10 +41,32 @@ def matmul(a, b, *, block_m=128, block_n=128, block_k=128, backend="pallas",
             f"matmul: {m}x{k}x{n} degraded the requested blocks to "
             f"({bm},{bk},{bn}) = {ncells} grid cells; pad the operands or "
             "pass block sizes that divide the shapes")
-    defines = dict(
+    return dict(
         M=m, K=k, N=n, bm=bm, bk=bk, bn=bn,
         dtype=jnp.dtype(a.dtype).name,
-        out_dtype=jnp.dtype(out_dtype or a.dtype).name)
-    kernel = default_device(backend).build_kernel(matmul_builder, defines)
-    (out,) = kernel.run(a, b)
-    return out
+        out_dtype=jnp.dtype(params["out_dtype"] or a.dtype).name)
+
+
+def _example(rng):
+    a = rng.randn(48, 64).astype("float32")
+    b = rng.randn(64, 32).astype("float32")
+    return (a, b), dict(block_m=16, block_n=16, block_k=32)
+
+
+matmul = define_op(
+    "matmul",
+    builder=matmul_builder,
+    ref=matmul_ref,
+    derive_defines=_defines,
+    early=_early,
+    defaults=dict(block_m=128, block_n=128, block_k=128, out_dtype=None),
+    ref_params=("out_dtype",),
+    sweep=dict(bm=[32, 64, 128, 256], bn=[32, 64, 128, 256],
+               bk=[32, 64, 128, 256]),
+    example=_example,
+    doc="""a: (M, K) @ b: (K, N) with f32 accumulation across a reduce axis.
+
+    One kernel source (``matmul_builder``) expands to jnp/loops/pallas; the
+    host path (backend pick, block fitting, build cache, tuning) is owned by
+    ``define_op``.""",
+)

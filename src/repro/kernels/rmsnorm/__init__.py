@@ -1,4 +1,6 @@
-from .ops import rmsnorm
+from .kernel import rmsnorm_builder
+from .ops import rmsnorm, rmsnorm_pallas, rmsnorm_unified
 from .ref import rmsnorm_ref
 
-__all__ = ["rmsnorm", "rmsnorm_ref"]
+__all__ = ["rmsnorm", "rmsnorm_builder", "rmsnorm_pallas", "rmsnorm_ref",
+           "rmsnorm_unified"]

@@ -4,19 +4,18 @@ One builder expands to all three backends (``jnp`` / ``loops`` / ``pallas``);
 the former bespoke ``pl.pallas_call`` is gone. Rows stay resident in VMEM per
 grid cell, so the sum-of-squares reduction is within-tile (no reduce axis
 needed — contrast ``repro.kernels.matmul``, which carries scratch across a
-sequential reduce axis).
+sequential reduce axis). The host path (backend pick, block fitting, build
+cache, VJP) lives in the ``define_op`` declaration in ``ops.py``.
 """
 
 from __future__ import annotations
 
-import math
-
 import jax
 import jax.numpy as jnp
 
-from repro.core import Spec, Tile, default_device, fit_block
+from repro.core import Spec, Tile
 
-__all__ = ["rmsnorm_builder", "rmsnorm_unified", "rmsnorm_pallas"]
+__all__ = ["rmsnorm_builder"]
 
 
 def rmsnorm_builder(D):
@@ -33,29 +32,3 @@ def rmsnorm_builder(D):
                 Tile("w", (d,), wdtype)],           # whole-array tile
         outputs=[Tile("o", (rows, d), dtype, block=(br, d), index=lambda i: (i, 0))],
         body=body)
-
-
-def rmsnorm_unified(x, w, *, eps=1e-6, block_rows=256, backend="pallas",
-                    interpret=None):
-    """x: (..., D); w: (D,). Normalizes the last axis on any backend.
-
-    ``interpret=None`` lets the Device pick (Pallas interpret mode off-TPU);
-    pass an explicit bool to force it."""
-    orig_shape = x.shape
-    d = orig_shape[-1]
-    rows = math.prod(orig_shape[:-1])
-    if rows == 0 or d == 0:
-        return jnp.asarray(x)  # empty input: nothing to normalize
-    x2 = x.reshape(rows, d)
-    block_rows = fit_block(block_rows, rows)
-    kernel = default_device(backend, interpret).build_kernel(rmsnorm_builder, dict(
-        rows=rows, d=d, block_rows=block_rows, eps=float(eps),
-        dtype=jnp.dtype(x.dtype).name, wdtype=jnp.dtype(w.dtype).name))
-    (out,) = kernel.run(x2, w)
-    return out.reshape(orig_shape)
-
-
-def rmsnorm_pallas(x, w, *, eps=1e-6, block_rows=256, interpret=True):
-    """Backward-compatible name for the pallas expansion (interpret honored)."""
-    return rmsnorm_unified(x, w, eps=eps, block_rows=block_rows,
-                           backend="pallas", interpret=interpret)

@@ -1,4 +1,6 @@
-from .ops import ssm_scan
+from .kernel import ssm_scan_builder
+from .ops import ssm_scan, ssm_scan_pallas
 from .ref import selective_scan_assoc, selective_scan_ref
 
-__all__ = ["ssm_scan", "selective_scan_ref", "selective_scan_assoc"]
+__all__ = ["ssm_scan", "ssm_scan_builder", "ssm_scan_pallas",
+           "selective_scan_ref", "selective_scan_assoc"]

@@ -1,102 +1,100 @@
-"""Chunked selective-scan as a Pallas TPU kernel.
+"""Chunked selective-scan in the unified kernel language.
 
 TPU adaptation: the GPU selective-scan kernel parallelizes over threads within
 a warp; here channels (d_inner) are the vector lanes and time is walked
 sequentially in VMEM-resident chunks, with the (d_block, N) state carried in
-VMEM scratch across the chunk grid (innermost axis). exp/softplus fusion and
-the B-outer-product happen in-register — nothing (Bt, L, Dm, N)-shaped ever
-touches HBM, which is the entire point of the kernel.
+VMEM scratch across the chunk grid (trailing *reduce* axis). exp/softplus
+fusion and the B-outer-product happen in-register — nothing (Bt, L, Dm, N)-
+shaped ever touches HBM, which is the entire point of the kernel.
+
+The per-chunk ``y`` writes are a *streamed* output (``Tile(stream=True)``):
+each grid cell writes its own chunk block, so the kernel — formerly a bespoke
+``pl.pallas_call`` — is now one source expanding to jnp/loops/pallas. The
+host path lives in the ``define_op`` declaration in ``ops.py``.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["ssm_scan_pallas"]
+from repro.core import Scratch, Spec, Tile
 
-
-def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
-                 y_ref, hT_ref, h_scr, *, chunk, nchunks, d_block, n_state):
-    ci = pl.program_id(2)
-
-    @pl.when(ci == 0)
-    def _init():
-        h_scr[...] = h0_ref[0]
-
-    A = a_ref[...]                      # (d_block, N)
-    Dskip = d_ref[...]                  # (1, d_block)
-    x = x_ref[0]                        # (chunk, d_block)
-    dt = dt_ref[0]                      # (chunk, d_block)
-    Bm = b_ref[0]                       # (chunk, N)
-    Cm = c_ref[0]                       # (chunk, N)
-
-    def step(t, carry):
-        h, ys = carry
-        dt_t = dt[t][:, None].astype(jnp.float32)          # (d_block, 1)
-        x_t = x[t][:, None].astype(jnp.float32)
-        dA = jnp.exp(dt_t * A)                             # (d_block, N)
-        dBx = dt_t * Bm[t][None, :] * x_t                  # (d_block, N)
-        h = dA * h + dBx
-        y_t = (h * Cm[t][None, :]).sum(axis=1) + Dskip[0] * x[t].astype(jnp.float32)
-        ys = jax.lax.dynamic_update_slice(ys, y_t[None, :], (t, 0))
-        return h, ys
-
-    h0 = h_scr[...]
-    ys0 = jnp.zeros((chunk, d_block), jnp.float32)
-    hT, ys = jax.lax.fori_loop(0, chunk, step, (h0, ys0))
-    h_scr[...] = hT
-    y_ref[0] = ys.astype(y_ref.dtype)
-
-    @pl.when(ci == nchunks - 1)
-    def _fin():
-        hT_ref[0] = h_scr[...]
+__all__ = ["ssm_scan_builder"]
 
 
-def ssm_scan_pallas(x, delta, A, B, C, D, *, h0=None, chunk=64, d_block=None,
-                    interpret=True):
-    """Fused selective scan. Shapes as in ref.selective_scan_ref.
+def ssm_scan_builder(D):
+    """x, delta: (bt, L, dm); A: (dm, n); B, C: (bt, L, n); Dskip: (1, dm);
+    h0: (bt, dm, n) -> y: (bt, L, dm) streamed per chunk, hT: (bt, dm, n).
 
-    Grid: (batch, Dm/d_block, L/chunk) — chunk innermost so the state scratch
-    carries across time; d-blocks are independent.
-    """
-    bt, L, dm = x.shape
-    n = A.shape[1]
-    d_block = d_block or min(dm, 512)
-    chunk = min(chunk, L)
-    assert dm % d_block == 0 and L % chunk == 0, (dm, d_block, L, chunk)
-    nchunks = L // chunk
-    if h0 is None:
-        h0 = jnp.zeros((bt, dm, n), jnp.float32)
-    D2 = D.reshape(1, dm)
+    Grid (bt, dm/d_block, L/chunk) — chunk is the sequential reduce axis so
+    the state scratch carries across time; d-blocks are independent."""
+    bt, L, dm, n = D.bt, D.L, D.dm, D.n
+    chunk, dblk = D.chunk, D.d_block
+    dtype = jnp.dtype(D.dtype)
 
-    kernel = functools.partial(_scan_kernel, chunk=chunk, nchunks=nchunks,
-                               d_block=d_block, n_state=n)
-    y, hT = pl.pallas_call(
-        kernel,
-        grid=(bt, dm // d_block, nchunks),
-        in_specs=[
-            pl.BlockSpec((1, chunk, d_block), lambda b, di, ci: (b, ci, di)),  # x
-            pl.BlockSpec((1, chunk, d_block), lambda b, di, ci: (b, ci, di)),  # delta
-            pl.BlockSpec((d_block, n), lambda b, di, ci: (di, 0)),             # A
-            pl.BlockSpec((1, chunk, n), lambda b, di, ci: (b, ci, 0)),         # B
-            pl.BlockSpec((1, chunk, n), lambda b, di, ci: (b, ci, 0)),         # C
-            pl.BlockSpec((1, d_block), lambda b, di, ci: (0, di)),             # D
-            pl.BlockSpec((1, d_block, n), lambda b, di, ci: (b, di, 0)),       # h0
+    def body(ctx, x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+             y_ref, hT_ref):
+        h_scr, = ctx.scratch
+
+        @ctx.when(ctx.is_first)
+        def _init():
+            h_scr[...] = h0_ref[0]
+
+        A = a_ref[...]                      # (dblk, n)
+        Dskip = d_ref[...]                  # (1, dblk)
+        x = x_ref[0]                        # (chunk, dblk)
+        dt = dt_ref[0]                      # (chunk, dblk)
+        Bm = b_ref[0]                       # (chunk, n)
+        Cm = c_ref[0]                       # (chunk, n)
+
+        def step(t, carry):
+            h, ys = carry
+            dt_t = dt[t][:, None].astype(jnp.float32)          # (dblk, 1)
+            x_t = x[t][:, None].astype(jnp.float32)
+            dA = jnp.exp(dt_t * A)                             # (dblk, n)
+            dBx = dt_t * Bm[t][None, :] * x_t                  # (dblk, n)
+            h = dA * h + dBx
+            y_t = (h * Cm[t][None, :]).sum(axis=1) + \
+                Dskip[0] * x[t].astype(jnp.float32)
+            ys = jax.lax.dynamic_update_slice(ys, y_t[None, :], (t, 0))
+            return h, ys
+
+        h0 = h_scr[...]
+        ys0 = jnp.zeros((chunk, dblk), jnp.float32)
+        hT, ys = jax.lax.fori_loop(0, chunk, step, (h0, ys0))
+        h_scr[...] = hT
+        y_ref[0] = ys.astype(y_ref.dtype)   # streamed: this chunk's block
+
+        @ctx.when(ctx.is_last)
+        def _fin():
+            hT_ref[0] = h_scr[...]
+
+    return Spec(
+        "ssm_scan",
+        grid=(bt, dm // dblk, L // chunk),
+        reduce_axes=(2,),
+        scratch=[Scratch((dblk, n), jnp.float32)],
+        inputs=[
+            Tile("x", (bt, L, dm), dtype, block=(1, chunk, dblk),
+                 index=lambda b, di, ci: (b, ci, di)),
+            Tile("delta", (bt, L, dm), dtype, block=(1, chunk, dblk),
+                 index=lambda b, di, ci: (b, ci, di)),
+            Tile("A", (dm, n), jnp.float32, block=(dblk, n),
+                 index=lambda b, di, ci: (di, 0)),
+            Tile("B", (bt, L, n), dtype, block=(1, chunk, n),
+                 index=lambda b, di, ci: (b, ci, 0)),
+            Tile("C", (bt, L, n), dtype, block=(1, chunk, n),
+                 index=lambda b, di, ci: (b, ci, 0)),
+            Tile("Dskip", (1, dm), jnp.float32, block=(1, dblk),
+                 index=lambda b, di, ci: (0, di)),
+            Tile("h0", (bt, dm, n), jnp.float32, block=(1, dblk, n),
+                 index=lambda b, di, ci: (b, di, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, chunk, d_block), lambda b, di, ci: (b, ci, di)),  # y
-            pl.BlockSpec((1, d_block, n), lambda b, di, ci: (b, di, 0)),       # hT
+        outputs=[
+            Tile("y", (bt, L, dm), dtype, block=(1, chunk, dblk),
+                 index=lambda b, di, ci: (b, ci, di), stream=True),
+            Tile("hT", (bt, dm, n), jnp.float32, block=(1, dblk, n),
+                 index=lambda b, di, ci: (b, di, 0)),
         ],
-        out_shape=[
-            jax.ShapeDtypeStruct((bt, L, dm), x.dtype),
-            jax.ShapeDtypeStruct((bt, dm, n), jnp.float32),
-        ],
-        scratch_shapes=[pltpu.VMEM((d_block, n), jnp.float32)],
-        interpret=interpret,
-    )(x, delta, A, B, C, D2, h0)
-    return y, hT
+        body=body)

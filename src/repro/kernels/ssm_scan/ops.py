@@ -1,34 +1,102 @@
-"""Public selective-scan op: pallas forward, associative-scan VJP."""
+"""Public selective-scan op — a ``define_op`` declaration.
+
+Forward: the unified-language chunked kernel (streamed per-chunk ``y``,
+state carried in scratch across the chunk reduce axis). Backward: oracle
+VJP through the associative-scan reference (what the jnp model path uses).
+"""
 
 from __future__ import annotations
 
-import jax
+import jax.numpy as jnp
 
-from .kernel import ssm_scan_pallas
+from repro.core import OpVJP, define_op, fit_block
+from .kernel import ssm_scan_builder
 from .ref import selective_scan_assoc, selective_scan_ref
 
-__all__ = ["ssm_scan"]
+__all__ = ["ssm_scan", "ssm_scan_pallas"]
 
 
-@jax.custom_vjp
-def _scan(x, delta, A, B, C, D):
-    y, _ = ssm_scan_pallas(x, delta, A, B, C, D)
-    return y
+def _pre(args, params):
+    x, delta, A, B, C, D = args
+    bt, L, dm = x.shape
+    n = A.shape[1]
+    h0 = params.pop("h0", None)
+    if h0 is None:
+        h0 = jnp.zeros((bt, dm, n), jnp.float32)
+    return x, delta, A, B, C, D.reshape(1, dm), h0
 
 
-def _scan_fwd(x, delta, A, B, C, D):
-    return _scan(x, delta, A, B, C, D), (x, delta, A, B, C, D)
+def _defines(args, params):
+    x, delta, A, B, C, D2, h0 = args
+    bt, L, dm = x.shape
+    n = A.shape[1]
+    want_chunk = params["chunk"]
+    want_dblk = params["d_block"] or min(dm, 512)
+    chunk = fit_block(want_chunk, L)
+    d_block = fit_block(want_dblk, dm)
+    ncells = bt * (dm // d_block) * (L // chunk)
+    degraded = chunk < min(want_chunk, L) or d_block < min(want_dblk, dm)
+    if degraded and ncells > 1 << 16:
+        # prime/awkward dims collapsed the blocks; the grid would make Spec
+        # validation and the expansions pathologically slow — fail loudly
+        raise ValueError(
+            f"ssm_scan: (L={L}, dm={dm}) degraded blocks to (chunk={chunk}, "
+            f"d_block={d_block}) = {ncells} grid cells; pad the operands or "
+            "pass chunk/d_block that divide the shapes")
+    return dict(bt=bt, L=L, dm=dm, n=n, chunk=chunk, d_block=d_block,
+                dtype=jnp.dtype(x.dtype).name)
 
 
-def _scan_bwd(res, g):
-    x, delta, A, B, C, D = res
-    _, vjp = jax.vjp(lambda *a: selective_scan_assoc(*a)[0], x, delta, A, B, C, D)
+def _ref(x, delta, A, B, C, D):
+    return selective_scan_assoc(x, delta, A, B, C, D)[0]
+
+
+def _bwd(params, res, g):
+    import jax
+
+    _, vjp = jax.vjp(lambda *a: selective_scan_assoc(*a)[0], *res)
     return vjp(g)
 
 
-_scan.defvjp(_scan_fwd, _scan_bwd)
+def _tune_ref(args, params):
+    x, delta, A, B, C, D2, h0 = args
+    return selective_scan_ref(x, delta, A, B, C, D2[0], h0=h0)  # (y, hT)
 
 
-def ssm_scan(x, delta, A, B, C, D):
-    """Differentiable fused selective scan; see ref.selective_scan_ref."""
-    return _scan(x, delta, A, B, C, D)
+def _example(rng):
+    import numpy as np
+
+    bt, L, dm, n = 1, 64, 16, 4
+    x = rng.randn(bt, L, dm).astype("float32")
+    delta = (np.log1p(np.exp(rng.randn(bt, L, dm))) * 0.1).astype("float32")
+    A = -(np.abs(rng.randn(dm, n)) + 0.1).astype("float32")
+    B = rng.randn(bt, L, n).astype("float32")
+    C = rng.randn(bt, L, n).astype("float32")
+    D = rng.randn(dm).astype("float32")
+    return (x, delta, A, B, C, D), dict(chunk=16)
+
+
+ssm_scan = define_op(
+    "ssm_scan",
+    builder=ssm_scan_builder,
+    ref=_ref,
+    derive_defines=_defines,
+    pre=_pre,
+    vjp=OpVJP(bwd=_bwd),
+    public_outputs=1,                       # hT is residual/serving-only
+    defaults=dict(chunk=64, d_block=None),
+    array_params=("h0",),
+    tune_ref=_tune_ref,
+    sweep=dict(chunk=[16, 32, 64, 128], d_block=[128, 256, 512]),
+    example=_example,
+    doc="""Differentiable fused selective scan; see ref.selective_scan_ref.
+    x, delta: (Bt, L, Dm); A: (Dm, N); B, C: (Bt, L, N); D: (Dm,) -> y.""",
+)
+
+
+def ssm_scan_pallas(x, delta, A, B, C, D, *, h0=None, chunk=64, d_block=None,
+                    interpret=None, backend="pallas"):
+    """Functional entry point returning (y, hT) — shapes as in
+    ref.selective_scan_ref; historic name kept for state-carry composition."""
+    return ssm_scan.raw(x, delta, A, B, C, D, h0=h0, chunk=chunk,
+                        d_block=d_block, backend=backend, interpret=interpret)

@@ -10,7 +10,7 @@ from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import BACKENDS, Device, Scratch, Spec, Tile, autotune
 from repro.kernels.matmul import matmul, matmul_builder, matmul_ref
-from repro.kernels.rmsnorm.kernel import rmsnorm_unified
+from repro.kernels.rmsnorm import rmsnorm_unified
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 
 SETTINGS = dict(max_examples=10, deadline=None)
