@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.flash_attention.ref import mha_chunked, mha_ref
+from repro.kernels.flash_attention import decode_attention, flash_attention
+from repro.kernels.flash_attention.ref import decode_ref, mha_chunked, mha_ref
 from repro.kernels.ssm_scan.ref import selective_scan_assoc
 from repro.layers.mamba import ssd_chunked
 from .common import Row, SMOKE_TIME, time_fn
@@ -36,6 +37,37 @@ def run(rows: list, smoke: bool = False):
     sec = time_fn(f_chk, q, k, v, **tkw)
     rows.append(Row(f"attn/chunked/s{s}", sec,
                     f"{flops / sec / 1e9:.1f} GFLOP/s"))
+
+    # flash BACKWARD (unified language, fused dq/dk/dv; jnp expansion is the
+    # meaningful CPU row) vs grad through the oracle
+    bq = 64 if smoke else 128
+    bwd_flops = int(2.5 * flops)  # fwd recompute + dq/dk/dv matmuls
+
+    def _loss(fn, **kw):
+        return jax.jit(jax.grad(
+            lambda q_, k_, v_: (fn(q_, k_, v_, causal=True, **kw) ** 2).sum(),
+            argnums=(0, 1, 2)))
+
+    sec = time_fn(_loss(mha_ref), q, k, v, **tkw)
+    rows.append(Row(f"attn/bwd_ref/s{s}", sec,
+                    f"{bwd_flops / sec / 1e9:.1f} GFLOP/s"))
+    sec = time_fn(_loss(flash_attention, block_q=bq, block_kv=bq,
+                        backend="jnp"), q, k, v, **tkw)
+    rows.append(Row(f"attn/flash_bwd/s{s}", sec,
+                    f"{bwd_flops / sec / 1e9:.1f} GFLOP/s"))
+
+    # single-token decode against a full cache: oracle vs the flash_decode op
+    q1 = q[:, :, :1]
+    dec_flops = 4 * b * h * s * d
+    bkv = min(64 if smoke else 512, s)
+    sec = time_fn(jax.jit(lambda q_, k_, v_: decode_ref(q_, k_, v_)),
+                  q1, k, v, **tkw)
+    rows.append(Row(f"attn/decode_ref/s{s}", sec,
+                    f"{dec_flops / sec / 1e9:.1f} GFLOP/s"))
+    sec = time_fn(jax.jit(lambda q_, k_, v_: decode_attention(
+        q_, k_, v_, block_kv=bkv, backend="jnp")), q1, k, v, **tkw)
+    rows.append(Row(f"attn/flash_decode/s{s}", sec,
+                    f"{dec_flops / sec / 1e9:.1f} GFLOP/s"))
 
     # ssm scans
     bt, L, dm, n = (1, 128, 64, 8) if smoke else (1, 2048, 512, 16)

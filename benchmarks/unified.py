@@ -1,14 +1,16 @@
-"""Unified-language kernel rows: matmul (reduce axis), rmsnorm and the
-flash-attention forward (masked grid cells + reduce axis + scratch) on all
-three backend expansions. The pallas-vs-oracle ratio is the paper's
-portability pitch made measurable: one source, per-backend performance."""
+"""Unified-language kernel rows: matmul (reduce axis), rmsnorm and the full
+flash-attention family — forward, fused backward (per-output reduce
+granularity) and single-token decode — on all three backend expansions. The
+pallas-vs-oracle ratio is the paper's portability pitch made measurable: one
+source, per-backend performance."""
 
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from repro.core import BACKENDS
-from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention import decode_attention, flash_attention
 from repro.kernels.matmul import matmul
 from repro.kernels.rmsnorm import rmsnorm_unified
 
@@ -59,4 +61,28 @@ def run(rows, smoke: bool = False):
         rows.append(Row(f"unified/flash_attention/{backend}", sec,
                         f"s={s2} bq=bkv={bq} "
                         f"gflops={afl / sec / 1e9:.1f}"))
+
+    # flash BACKWARD: one fused dq/dk/dv kernel (Tile(reduce=...) per-output
+    # granularity) through the op's custom VJP, on every backend
+    bfl = int(2.5 * afl)
+    for backend in BACKENDS:
+        f = jax.jit(jax.grad(
+            lambda q_, k_, v_, be=backend: (flash_attention(
+                q_, k_, v_, causal=True, block_q=bq, block_kv=bq,
+                backend=be) ** 2).sum(),
+            argnums=(0, 1, 2)))
+        sec = time_fn(f, q, kk, vv, **tkw)
+        rows.append(Row(f"unified/flash_bwd/{backend}", sec,
+                        f"s={s2} bq=bkv={bq} "
+                        f"gflops={bfl / sec / 1e9:.1f}"))
+
+    # flash DECODE: one query token vs the kv cache (dynamic kv_len)
+    q1 = q[:, :, :1]
+    dfl = 4 * b2 * h2 * s2 * d2
+    for backend in BACKENDS:
+        sec = time_fn(lambda q_, k_, v_, be=backend: decode_attention(
+            q_, k_, v_, block_kv=bq, backend=be), q1, kk, vv, **tkw)
+        rows.append(Row(f"unified/flash_decode/{backend}", sec,
+                        f"s={s2} bkv={bq} "
+                        f"gflops={dfl / sec / 1e9:.1f}"))
     return rows

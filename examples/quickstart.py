@@ -81,7 +81,26 @@ def main():
           f"({'cache hit' if best.cached else f'{len(best.trials)} trials'}, "
           f"best {best.best_seconds * 1e6:.0f} us)")
 
-    print("one declaration -> every backend, tuned, identical results")
+    # 7. Custom-VJP ops: declare vjp=OpVJP(bwd=...) and the op becomes
+    #    differentiable with the BACKWARD also built from unified-language
+    #    kernels, run on the same backend as the forward. flash_attention is
+    #    the full-size example: its bwd is ONE fused dq/dk/dv kernel whose
+    #    outputs accumulate at different reduce granularities
+    #    (Tile(reduce=...) — dq over k-blocks, dk/dv over q-blocks, one grid).
+    import jax
+    from repro.kernels.flash_attention import flash_attention
+
+    q = rng.randn(1, 2, 64, 32).astype(np.float32)
+    k = rng.randn(1, 2, 64, 32).astype(np.float32)
+    v = rng.randn(1, 2, 64, 32).astype(np.float32)
+    for backend in BACKENDS:
+        dq = jax.grad(lambda q_: (flash_attention(
+            q_, k, v, block_q=32, block_kv=32, backend=backend) ** 2).sum())(q)
+        print(f"{backend:>7s}: flash_attention grad OK "
+              f"(|dq| = {float(jnp.abs(dq).mean()):.3f})")
+
+    print("one declaration -> every backend, tuned, differentiable, "
+          "identical results")
 
 
 if __name__ == "__main__":

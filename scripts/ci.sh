@@ -16,6 +16,15 @@ if ! python -c "import pytest" >/dev/null 2>&1; then
     exit 1
 fi
 
+# Purity guard: the unified kernel language is the ONLY way to write a
+# kernel — any bespoke pl.pallas_call in the kernel library fails CI.
+if grep -rn "pl.pallas_call" src/repro/kernels/; then
+    echo "ci.sh: bespoke pl.pallas_call found in src/repro/kernels/ —" \
+         "port it to the unified language (repro.core.lang)" >&2
+    exit 1
+fi
+echo "ci.sh: kernel purity OK (no pl.pallas_call under src/repro/kernels/)"
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
 # Benchmark smoke: tiny shapes, one rep — every benchmark path must still

@@ -10,7 +10,8 @@ from .device import Device, BuildStats, default_device, fit_block
 from .kernel import Kernel
 from .memory import Memory
 from .op import Op, OpVJP, define_op, get_op, oracle_vjp, registered_ops
-from .tune import TuneResult, autotune, tune_cache_dir, tune_cache_key
+from .tune import (SCHEMA_VERSION, TuneResult, autotune, cached_winner,
+                   tune_cache_dir, tune_cache_key)
 
 __all__ = [
     "BACKENDS",
@@ -21,12 +22,14 @@ __all__ = [
     "Memory",
     "Op",
     "OpVJP",
+    "SCHEMA_VERSION",
     "Scratch",
     "Spec",
     "Tile",
     "TileRef",
     "TuneResult",
     "autotune",
+    "cached_winner",
     "cdiv",
     "default_device",
     "define_op",

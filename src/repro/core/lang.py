@@ -36,6 +36,29 @@ Keyword mapping (paper appendix tables → this module):
   (writes inside the           index map may depend on reduce ids: every grid
   sequential inner loop)       cell writes its own block exactly once (e.g. the
                                per-chunk ``y`` of a chunked scan)
+  per-output reduce            ``Tile(..., reduce=(axes,))`` — an *output* that
+  granularity (outputs         accumulates over a SUBSET of the kernel's reduce
+  accumulated at different     axes; its index map may depend on the remaining
+  levels of the sequential     reduce axes (e.g. flash-bwd's fused pass: ``dq``
+  loop nest)                   accumulates over k-blocks while ``dk``/``dv``
+                               accumulate over q-blocks in ONE grid).
+                               ``stream=True`` is sugar for ``reduce=()``;
+                               the default (``reduce=None``) accumulates over
+                               every reduce axis. Blocks keep their contents
+                               across their accumulated visits — initialize
+                               under ``ctx.reduce_first(d)`` and read-modify-
+                               write (first-visit contents are undefined on a
+                               real TPU, zero-filled on jnp/loops/interpret).
+                               Real-TPU caveat: when an ACCUMULATED axis is
+                               outer to a slot axis (flash-bwd's dk/dv), the
+                               block's revisits are non-consecutive and rely
+                               on the compiled pipeline writing back and
+                               refetching the output window between them —
+                               guaranteed on jnp/loops/interpret, flagged for
+                               real-TPU validation in ROADMAP before compiled
+                               use (consecutive revisits — the accumulated
+                               axis innermost, as in dq or matmul — are the
+                               long-validated safe pattern everywhere)
   occaPrivate(Array)           ``ctx.private(x)`` — per-tile values (registers)
   occaCPU/occaGPU/occaOpenMP…  ``ctx.backend`` / ``ctx.is_pallas`` etc.
   occaKernelInfoArg            the ``ctx`` argument itself
@@ -53,12 +76,13 @@ first-visit contents are undefined on a real TPU (zero-filled only on the
 jnp/loops/interpret expansions), so read-modify-write bodies must initialize
 the block under ``ctx.when(ctx.is_first)`` as well.
 
-Restrictions (asserted): block shapes must divide the full array shape; output
-index maps must not depend on reduce-axis ids — unless the tile is declared
-``stream=True``, in which case the map MAY use reduce ids and every grid cell
-must write a distinct block (chunked-scan ``y`` writes); and every output
-block is visited exactly once per reduce iteration-space (exactly once overall
-when the kernel has no reduce axes).
+Restrictions (asserted): block shapes must divide the full array shape; an
+output's index map must not depend on the reduce axes it ACCUMULATES over
+(all of them by default; the declared subset with ``Tile(reduce=...)``; none
+with ``stream=True``) — it may depend on the rest; and distinct
+(outer x non-accumulated-reduce) cells must write distinct blocks, covering
+every block exactly once (exactly once overall when the kernel has no reduce
+axes).
 """
 
 from __future__ import annotations
@@ -118,6 +142,11 @@ class Tile:
     # ids — each grid cell (outer x reduce) writes a distinct block exactly
     # once, instead of accumulating into one block across the reduce space.
     stream: bool = False
+    # Output tiles only: the subset of the Spec's reduce axes (grid-axis
+    # numbers) this output ACCUMULATES over. None (default) = all reduce
+    # axes; () = none (same as stream=True). The index map may depend on the
+    # reduce axes NOT in this set — per-output reduce granularity.
+    reduce: tuple[int, ...] | None = None
 
     def resolved_block(self) -> tuple[int, ...]:
         blk = tuple(self.shape) if self.block is None else tuple(self.block)
@@ -202,55 +231,46 @@ class Spec:
         for t in self.inputs:
             t.resolved_block()
 
-        # Every output block must be visited exactly once per reduce
-        # iteration-space (exactly once overall for non-reduce kernels), and
-        # output index maps must not depend on the reduce ids (the language's
-        # accumulate-then-flush contract needs a stable destination).
-        # Streamed outputs relax that: their index map MAY depend on reduce
-        # ids, and instead every grid cell must write a distinct block with
-        # the full grid covering all blocks exactly once.
+        # Per-output reduce granularity: an output accumulates over SOME of
+        # the reduce axes (all by default; none when streamed) and its index
+        # map may depend only on the REMAINING axes — the accumulate-then-
+        # flush contract needs a destination that is stable along exactly the
+        # accumulated axes. Distinct (outer x non-accumulated) cells must
+        # write distinct blocks, covering every block exactly once.
         for t in self.outputs:
             blk = t.resolved_block()
             idx = t.resolved_index(self.grid)
             nblocks = math.prod(s // b for s, b in zip(t.shape, blk))
-            if t.stream:
-                visited: set[tuple] = set()
-                for cell in np.ndindex(*self.grid):
-                    bi = tuple(int(i) for i in idx(*cell))
-                    if bi in visited:
-                        raise ValueError(
-                            f"stream output tile {t.name!r} block {bi} visited "
-                            "more than once; streamed outputs must write a "
-                            "distinct block per grid cell")
-                    visited.add(bi)
-                if len(visited) != nblocks:
-                    raise ValueError(
-                        f"stream output tile {t.name!r}: {len(visited)} blocks "
-                        f"visited but {nblocks} exist; kernel would leave garbage")
-                continue
+            slot_axes = self.output_slot_axes(t)
+            kind = "stream output" if t.stream else "output"
             seen: dict[tuple, tuple] = {}
-            visited = set()
+            visited: set[tuple] = set()
             for cell in np.ndindex(*self.grid):
                 bi = tuple(int(i) for i in idx(*cell))
-                outer = cell[:k]
-                if outer in seen:
-                    if seen[outer] != bi:
+                key = cell[:k] + tuple(cell[a] for a in slot_axes)
+                if key in seen:
+                    if seen[key] != bi:
                         raise ValueError(
                             f"output tile {t.name!r}: index map depends on reduce "
-                            f"axes (cell {cell} -> {bi}, expected {seen[outer]}); "
-                            "reduce steps must accumulate into one block "
-                            "(or mark the tile stream=True)")
+                            f"axes it accumulates over (cell {cell} -> {bi}, "
+                            f"expected {seen[key]}); exclude those axes via "
+                            "Tile(reduce=...) or stream=True")
                 else:
                     if bi in visited:
+                        hint = ("streamed outputs must write a distinct block "
+                                "per grid cell" if t.stream else
+                                "grid-carried accumulation needs an explicit "
+                                "reduce axis (Spec(reduce_axes=...) + "
+                                "Tile(reduce=...)) — implicit revisits are "
+                                "rejected")
                         raise ValueError(
-                            f"output tile {t.name!r} block {bi} visited more than once; "
-                            "grid-carried accumulation needs an explicit reduce axis "
-                            "(Spec(reduce_axes=...)) — implicit revisits are rejected")
-                    seen[outer] = bi
+                            f"{kind} tile {t.name!r} block {bi} visited more "
+                            f"than once by distinct cells; {hint}")
+                    seen[key] = bi
                     visited.add(bi)
             if len(seen) != nblocks:
                 raise ValueError(
-                    f"output tile {t.name!r}: {len(seen)} blocks visited but "
+                    f"{kind} tile {t.name!r}: {len(seen)} blocks visited but "
                     f"{nblocks} exist; kernel would leave garbage")
 
     # -- grid split helpers --------------------------------------------------
@@ -262,11 +282,40 @@ class Spec:
     def reduce_grid(self) -> tuple[int, ...]:
         return tuple(self.grid[a] for a in self.reduce_axes)
 
-    def outer_index(self, t: Tile) -> Callable[..., tuple]:
-        """Output index map over *outer* cells (reduce ids pinned to 0)."""
+    def output_reduce_axes(self, t: Tile) -> tuple[int, ...]:
+        """The reduce axes this output ACCUMULATES over (sorted grid axes)."""
+        if t.reduce is not None:
+            r = tuple(sorted(int(a) for a in t.reduce))
+            if t.stream and r:
+                raise ValueError(
+                    f"output tile {t.name!r}: stream=True means reduce=(), "
+                    f"got reduce={r}")
+            if not set(r) <= set(self.reduce_axes):
+                raise ValueError(
+                    f"output tile {t.name!r}: reduce={r} is not a subset of "
+                    f"the kernel's reduce axes {self.reduce_axes}")
+            return r
+        return () if t.stream else self.reduce_axes
+
+    def output_slot_axes(self, t: Tile) -> tuple[int, ...]:
+        """Reduce axes the output's index map may depend on — they select
+        which of the output's blocks ("slot") a reduce step writes."""
+        acc = set(self.output_reduce_axes(t))
+        return tuple(a for a in self.reduce_axes if a not in acc)
+
+    def slot_index(self, t: Tile) -> Callable[..., tuple]:
+        """Output index map over (outer + slot-axis) cells — the accumulated
+        reduce ids are pinned to 0 (the map does not depend on them)."""
         full = t.resolved_index(self.grid)
-        pad = (0,) * len(self.reduce_axes)
-        return lambda *og: full(*og, *pad)
+        acc = set(self.output_reduce_axes(t))
+        k = len(self.outer_grid)
+
+        def f(*cells):
+            og, sg = cells[:k], iter(cells[k:])
+            rids = tuple(0 if a in acc else next(sg) for a in self.reduce_axes)
+            return full(*og, *rids)
+
+        return f
 
 
 class TileRef:
@@ -330,6 +379,17 @@ class Ctx:
     def reduce_dim(self, d: int = 0) -> int:
         return self.grid[self._reduce_axes[d]]
 
+    def reduce_first(self, d: int = 0):
+        """True on the first step along the d-th reduce axis — the init point
+        for state accumulated over THAT axis only (e.g. a ``Tile(reduce=...)``
+        output or a scratch reset per outer sweep of a 2-deep reduce nest)."""
+        return self._gids[self._reduce_axes[d]] == 0
+
+    def reduce_last(self, d: int = 0):
+        """True on the last step along the d-th reduce axis (flush point)."""
+        a = self._reduce_axes[d]
+        return self._gids[a] == self.grid[a] - 1
+
     @property
     def is_first(self):
         """True on the first visit of the reduce iteration-space (init point).
@@ -380,7 +440,9 @@ class Ctx:
         """Masked grid cell: run the thunk only when ``pred`` holds, skipping
         the WHOLE block's work otherwise (flash-attention's causal block skip).
 
-        ``pred`` must be a function of grid ids and defines only. Under pallas
+        ``pred`` must be a scalar bool of grid ids, defines and values already
+        loaded from input tiles (e.g. flash-decode's dynamic kv length) —
+        never of output/scratch contents. Under pallas
         this is ``pl.when`` (no MXU work issued for skipped cells); under
         jnp/loops the thunk becomes one branch of a ``lax.cond`` over the
         tracked refs (a real skip on the loops expansion; a select under the
@@ -513,68 +575,69 @@ def _expand_jnp(spec: Spec, defines: SimpleNamespace):
     red_grid = spec.reduce_grid
     nouter = math.prod(outer_grid) if outer_grid else 1
     nred = math.prod(red_grid) if red_grid else 1
-    streamed = [t.stream for t in spec.outputs]
+    # Per-output slot structure: within one outer cell, an output owns one
+    # block per combination of its slot axes (the reduce axes it does NOT
+    # accumulate over). Full-accumulate outputs have 1 slot; streamed outputs
+    # have nred. Blocks are carried as a (nslots, *blk) stack across the
+    # sequential reduce loop — a visited slot keeps its contents, so partial-
+    # reduce outputs read-modify-write their block exactly like the resident
+    # Pallas block.
+    slot_pos = []   # positions (within reduce_axes) of each output's slot axes
+    slot_dims = []  # the grid extents of those axes
+    for t in spec.outputs:
+        axes = spec.output_slot_axes(t)
+        slot_pos.append(tuple(spec.reduce_axes.index(a) for a in axes))
+        slot_dims.append(tuple(spec.grid[a] for a in axes))
 
     def fn(*in_arrays):
         def cell(flat_idx):
             ogids = jnp.unravel_index(flat_idx, outer_grid) if outer_grid else ()
-            out0 = tuple(jnp.zeros(t.resolved_block(), t.dtype) for t in spec.outputs)
+            stk0 = tuple(
+                jnp.zeros((math.prod(sd) if sd else 1,) + t.resolved_block(),
+                          t.dtype)
+                for t, sd in zip(spec.outputs, slot_dims))
             scr0 = tuple(jnp.zeros(s.shape, s.dtype) for s in spec.scratch)
-            # Streamed outputs write one block per reduce step: stack them
-            # per-cell and scatter after the loop.
-            stk0 = tuple(jnp.zeros((nred,) + t.resolved_block(), t.dtype)
-                         for t in spec.outputs if t.stream)
 
             def step(r, carry):
-                out_vals, stacks, scr_vals = carry
+                stacks, scr_vals = carry
                 rgids = jnp.unravel_index(r, red_grid) if red_grid else ()
                 gids = tuple(ogids) + tuple(rgids)
                 ins = [_slice_tile(t, a, gids, grid)
                        for t, a in zip(spec.inputs, in_arrays)]
-                # a stream block is fresh (contents undefined -> zeros) each
-                # visit; accumulating outputs keep their carried contents
-                cur = tuple(jnp.zeros_like(v) if streamed[i] else v
-                            for i, v in enumerate(out_vals))
+                slots, cur = [], []
+                for t, stack, pos, sd in zip(spec.outputs, stacks, slot_pos,
+                                             slot_dims):
+                    s = 0
+                    for p, dim in zip(pos, sd):
+                        s = s * dim + rgids[p]
+                    slots.append(s)
+                    blk = t.resolved_block()
+                    cur.append(lax.dynamic_slice(
+                        stack, (s,) + (0,) * len(blk), (1,) + blk)[0])
                 new_out, new_scr = _run_body(spec, "jnp", defines, gids, ins,
-                                             cur, scr_vals)
-                new_stacks = []
-                si = 0
-                for i, t in enumerate(spec.outputs):
-                    if t.stream:
-                        new_stacks.append(lax.dynamic_update_slice(
-                            stacks[si], new_out[i][None],
-                            (r,) + (0,) * len(t.resolved_block())))
-                        si += 1
-                return new_out, tuple(new_stacks), new_scr
+                                             tuple(cur), scr_vals)
+                new_stacks = tuple(
+                    lax.dynamic_update_slice(
+                        stack, v[None], (s,) + (0,) * (stack.ndim - 1))
+                    for stack, v, s in zip(stacks, new_out, slots))
+                return new_stacks, new_scr
 
             if red_grid:
-                out_vals, stacks, _ = lax.fori_loop(0, nred, step,
-                                                    (out0, stk0, scr0))
+                stacks, _ = lax.fori_loop(0, nred, step, (stk0, scr0))
             else:
-                out_vals, stacks, _ = step(0, (out0, stk0, scr0))
-            si = 0
-            per_out = []
-            for i, t in enumerate(spec.outputs):
-                if t.stream:
-                    per_out.append(stacks[si])
-                    si += 1
-                else:
-                    per_out.append(out_vals[i])
-            return tuple(per_out)
+                stacks, _ = step(0, (stk0, scr0))
+            return stacks
 
-        blocks = jax.vmap(cell)(jnp.arange(nouter))  # tuple of (nouter, ...) stacks
+        blocks = jax.vmap(cell)(jnp.arange(nouter))  # tuple of (nouter, nslots, ...)
         results = []
-        for t, stack in zip(spec.outputs, blocks):
+        for t, stack, sd in zip(spec.outputs, blocks, slot_dims):
             blk = t.resolved_block()
-            if t.stream:
-                # (nouter, nred, *blk) -> (ncells, *blk) in C order = the
-                # np.ndindex(*grid) visit order (reduce axes are trailing)
-                results.append(_assemble_blocks(
-                    t, stack.reshape((nouter * nred,) + blk), grid,
-                    t.resolved_index(grid)))
-            else:
-                results.append(_assemble_blocks(t, stack, outer_grid,
-                                                spec.outer_index(t)))
+            ns = math.prod(sd) if sd else 1
+            # (nouter, nslots, *blk) -> flat C order over (outer + slot axes),
+            # the same visit order as np.ndindex over that combined grid
+            results.append(_assemble_blocks(
+                t, stack.reshape((nouter * ns,) + blk),
+                tuple(outer_grid) + sd, spec.slot_index(t)))
         return tuple(results)
 
     return fn

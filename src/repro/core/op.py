@@ -59,10 +59,12 @@ class OpVJP:
     """Custom-VJP declaration for a :func:`define_op` op.
 
     ``bwd(params, residuals, cotangent) -> per-primal-arg cotangents`` is the
-    only required piece. ``residuals(outs, args, params)`` selects what the
-    backward needs (default: the primal args); ``outs`` is the FULL kernel
-    output tuple, so residual-only outputs (flash-attention's lse) are
-    available even though callers never see them."""
+    only required piece; ``params`` carries the resolved ``backend`` and
+    ``interpret`` so a backward built from unified-language kernels runs on
+    the same expansion as the forward. ``residuals(outs, args, params)``
+    selects what the backward needs (default: the primal args); ``outs`` is
+    the FULL kernel output tuple, so residual-only outputs (flash-attention's
+    lse) are available even though callers never see them."""
 
     def __init__(self, bwd: Callable, residuals: Callable | None = None):
         self.bwd = bwd
@@ -152,12 +154,17 @@ class Op:
             backend = "pallas"
         return backend, interpret, params
 
-    def _run_kernel(self, args, backend, interpret, params) -> tuple:
-        """derive -> build (Device kernel cache) -> run; ALL kernel outputs."""
+    def _prepare(self, args, params) -> tuple[tuple, dict, dict]:
+        """The shared call prologue: pre-hook (may eat params) + shape->defines
+        derivation. Returns (kernel args, defines, post-pre params)."""
         params = dict(params)
         if self._pre is not None:
             args = tuple(self._pre(tuple(args), params))
-        defines = self.derive_defines(tuple(args), params)
+        return tuple(args), self.derive_defines(tuple(args), params), params
+
+    def _run_kernel(self, args, backend, interpret, params) -> tuple:
+        """prepare -> build (Device kernel cache) -> run; ALL kernel outputs."""
+        args, defines, _ = self._prepare(args, params)
         kern = default_device(backend, interpret).build_kernel(
             self.builder, defines)
         return kern.run(*args)
@@ -186,8 +193,12 @@ class Op:
             return result, vjp.residuals(outs, args, params)
 
         def core_bwd(frozen, res, g):
-            _, interpret, params = self._resolve(_thaw(frozen))
+            # the bwd hook sees the resolved backend/interpret so a declared
+            # backward KERNEL runs on the same expansion as the forward —
+            # grads are backend-portable, not pallas-only
+            backend, interpret, params = self._resolve(_thaw(frozen))
             params["interpret"] = interpret
+            params["backend"] = backend
             return tuple(vjp.bwd(params, res, g))
 
         core.defvjp(core_fwd, core_bwd)
@@ -240,9 +251,7 @@ class Op:
         Winners persist under ``$REPRO_CACHE_DIR`` (``cache=False`` opts out):
         a warm cache performs zero builds and zero timed sweeps."""
         backend, interpret, params = self._resolve(kw)
-        params = dict(params)
-        run_args = tuple(self._pre(tuple(args), params)) if self._pre else tuple(args)
-        defines = self.derive_defines(run_args, params)
+        run_args, defines, params = self._prepare(args, params)
         sweep = dict(self.sweep if sweep is None else sweep)
         if not sweep:
             raise ValueError(f"op {self.name!r} declares no tuning sweep")
@@ -260,6 +269,20 @@ class Op:
             default_device(backend, interpret), self.builder, defines,
             sweep=sweep, args=run_args, warmup=warmup, repeats=repeats,
             validate=validate, ref=ref, cache=cache, name=self.name)
+
+    def cached_winner(self, args, *, sweep=None, **kw):
+        """The persisted ``op.tune`` winner for these args, or None — a PURE
+        cache lookup: no kernel builds, no timed sweeps, no oracle. This is
+        how serving warmup adopts tuned block sizes (``$REPRO_CACHE_DIR``)
+        instead of hardcoded defaults."""
+        backend, interpret, params = self._resolve(kw)
+        _, defines, _ = self._prepare(args, params)
+        sweep = dict(self.sweep if sweep is None else sweep)
+        if not sweep:
+            return None
+        dev = default_device(backend, interpret)
+        return _tune.cached_winner(self.name, defines, sweep, dev.backend,
+                                   dev.interpret)
 
     def __repr__(self):
         return (f"Op({self.name!r}, params={sorted(self.defaults)}, "

@@ -11,7 +11,11 @@ Winners persist across processes (OCCA's on-disk kernel cache analogue):
 ``autotune(..., cache=True)`` stores the best sweep values as JSON under
 ``$REPRO_CACHE_DIR`` (default ``~/.cache/repro-occa/``), keyed by
 (op/builder name, the non-swept defines, backend, device kind, jax version).
-A warm cache returns immediately — zero builds, zero timed sweeps.
+A warm cache returns immediately — zero builds, zero timed sweeps. Entries
+are stamped with :data:`SCHEMA_VERSION`; corrupt, mismatched or
+other-version entries are evicted on load (never crashed on, never silently
+reused). :func:`cached_winner` exposes the lookup without the sweep — the
+serving warmup path.
 """
 
 from __future__ import annotations
@@ -25,7 +29,13 @@ import time
 
 import jax
 
-__all__ = ["autotune", "TuneResult", "tune_cache_dir", "tune_cache_key"]
+__all__ = ["autotune", "cached_winner", "TuneResult", "tune_cache_dir",
+           "tune_cache_key", "SCHEMA_VERSION"]
+
+# Bump whenever the meaning of a cache entry changes (payload layout, winner
+# semantics, timing protocol). Entries stamped with any other version are
+# EVICTED on load — never crashed on, never silently reused.
+SCHEMA_VERSION = 2
 
 
 def tune_cache_dir() -> pathlib.Path:
@@ -62,13 +72,38 @@ def tune_cache_key(name: str, defines: dict, sweep: dict, backend: str,
     return digest, payload
 
 
-def _cache_load(digest: str):
+def _evict(path: pathlib.Path):
+    try:
+        path.unlink()
+    except OSError:
+        pass
+
+
+def _cache_load(digest: str, payload: dict, sweep_names):
+    """Load one cache entry, EVICTING anything unusable.
+
+    An entry is stale/mismatched — deleted on sight, treated as a miss — when
+    it is corrupt JSON, stamped with a schema version other than
+    :data:`SCHEMA_VERSION` (including pre-versioning entries with no stamp),
+    its stored tuning-problem payload disagrees with the one that produced
+    the digest (hand-edited or colliding file), or its winner no longer
+    covers the swept keys. Reusing any of those would either crash the sweep
+    consumer or silently answer a different tuning problem."""
     path = tune_cache_dir() / "autotune" / f"{digest}.json"
     try:
         with open(path) as f:
-            return json.load(f)
-    except (OSError, ValueError):
+            entry = json.load(f)
+    except OSError:
+        return None                     # no entry: nothing to evict
+    except ValueError:
+        _evict(path)                    # corrupt: remove and re-tune
         return None
+    if (entry.get("schema") != SCHEMA_VERSION
+            or any(entry.get(k) != v for k, v in payload.items())
+            or not all(n in entry.get("winner", {}) for n in sweep_names)):
+        _evict(path)
+        return None
+    return entry
 
 
 def _cache_store(digest: str, payload: dict, winner: dict, best_seconds: float):
@@ -77,11 +112,24 @@ def _cache_store(digest: str, payload: dict, winner: dict, best_seconds: float):
         root.mkdir(parents=True, exist_ok=True)
         tmp = root / f".{digest}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
-            json.dump(dict(payload, winner=winner, best_seconds=best_seconds),
+            json.dump(dict(payload, schema=SCHEMA_VERSION, winner=winner,
+                           best_seconds=best_seconds),
                       f, indent=1, sort_keys=True)
         os.replace(tmp, root / f"{digest}.json")
     except OSError:
         pass  # cache is an optimization; never fail the tune over it
+
+
+def cached_winner(name: str, defines: dict, sweep: dict, backend: str,
+                  interpret: bool = False) -> dict | None:
+    """The persisted winner for one tuning problem, or None — a pure lookup
+    (no builds, no timings). Stale entries are evicted along the way."""
+    names = sorted(sweep)
+    digest, payload = tune_cache_key(name, defines, sweep, backend, interpret)
+    hit = _cache_load(digest, payload, names)
+    if hit is None:
+        return None
+    return {n: hit["winner"][n] for n in names}
 
 
 class TuneResult(dict):
@@ -151,8 +199,8 @@ def autotune(device, builder, defines: dict, *, sweep: dict, args,
     if cache:
         digest, payload = tune_cache_key(name, defines, sweep, device.backend,
                                          getattr(device, "interpret", False))
-        hit = _cache_load(digest)
-        if hit is not None and all(n in hit.get("winner", {}) for n in names):
+        hit = _cache_load(digest, payload, names)
+        if hit is not None:
             winner = {n: hit["winner"][n] for n in names}
             return TuneResult(dict(defines, **winner), trials=[],
                               best_seconds=hit.get("best_seconds", float("nan")),

@@ -1,14 +1,14 @@
 """Kernels for the LM hot-spots.
 
 Each kernel ships with ``kernel.py`` (the unified-language builder),
-``ops.py`` (a single ``define_op`` declaration — the front-end owns backend
+``ops.py`` (``define_op`` declarations — the front-end owns backend
 selection, defines derivation, kernel caching, VJP wiring and autotuning)
 and ``ref.py`` (pure-jnp oracle), validated against the oracle across
-backends and shape/dtype sweeps. ``matmul``, ``rmsnorm``, ``ssm_scan`` and
-the flash-attention FORWARD are written once in the unified kernel language
-(``repro.core.lang``) and expand to every backend; flash-attention's
-backward and single-token decode remain hand-tiled ``pl.pallas_call``
-kernels (ROADMAP: port next).
+backends and shape/dtype sweeps. EVERY kernel — ``matmul``, ``rmsnorm``,
+``ssm_scan`` and the full flash-attention family (forward, fused backward,
+single-token decode) — is written once in the unified kernel language
+(``repro.core.lang``) and expands to every backend; ``scripts/ci.sh`` fails
+on any bespoke ``pallas_call`` under this package.
 """
 
 from . import flash_attention, matmul, rmsnorm, ssm_scan  # noqa: F401

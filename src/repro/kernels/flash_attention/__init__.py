@@ -1,5 +1,6 @@
-from .ops import decode_attention, flash_attention, flash_attention_fwd
+from .ops import (decode_attention, flash_attention, flash_attention_fwd,
+                  flash_decode)
 from .ref import decode_ref, mha_chunked, mha_ref
 
-__all__ = ["flash_attention", "flash_attention_fwd", "decode_attention",
-           "mha_ref", "mha_chunked", "decode_ref"]
+__all__ = ["flash_attention", "flash_attention_fwd", "flash_decode",
+           "decode_attention", "mha_ref", "mha_chunked", "decode_ref"]

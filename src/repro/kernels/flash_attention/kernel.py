@@ -8,26 +8,39 @@ flash-attention inner loop. Causal/sliding-window blocks that are fully
 masked are skipped whole with ``ctx.cell_when`` (no MXU work issued on
 pallas; a ``lax.cond`` skip on the functional expansions).
 
-The FORWARD is one kernel source (``flash_fwd_builder``) expanding to
-jnp/loops/pallas — its former bespoke ``pl.pallas_call`` is gone; the host
-path lives in the ``define_op`` declaration in ``ops.py``. The backward and
-single-token decode remain hand-tiled Pallas kernels (ROADMAP: port bwd next).
+Every kernel here is one unified-language source expanding to
+jnp/loops/pallas — the bespoke hand-tiled Pallas era is over:
+
+* ``flash_fwd_builder``    forward + lse stats (reduce over kv blocks)
+* ``flash_delta_builder``  fused rowwise ``sum(do * o)`` precompute
+* ``flash_bwd_builder``    ONE fused dq/dk/dv pass: grid (b, h, nq, nk) with
+  BOTH block axes sequential and per-output reduce granularity —
+  ``dq = Tile(reduce=(3,))`` accumulates over k-blocks in scratch while
+  ``dk``/``dv = Tile(reduce=(2,))`` accumulate over q-blocks directly in
+  their (revisited) output blocks. The two hand-tiled backward kernels this
+  replaces had *transposed* reduce orderings; ``Tile(reduce=...)`` expresses
+  both orderings in one grid, recomputing ``p`` once per (qi, ki) tile
+  instead of twice.
+* ``flash_decode_builder`` single-token decode against a (possibly partially
+  filled) kv cache; the valid length is a dynamic ``kv_len`` input, so one
+  compiled kernel serves every step of an incremental-decode loop.
+
+Host paths live in the ``define_op`` declarations in ``ops.py``;
+``flash_attention_bwd`` below is the backward's host wrapper (kernel builds
+via the shared Device cache + the GQA head-group reduction).
 """
 
 from __future__ import annotations
 
-import functools
 import math
 
-import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import Scratch, Spec, Tile
+from repro.core import Scratch, Spec, Tile, default_device
 
-__all__ = ["flash_fwd_builder", "flash_attention_bwd", "flash_decode"]
+__all__ = ["flash_fwd_builder", "flash_delta_builder", "flash_bwd_builder",
+           "flash_decode_builder", "flash_attention_bwd"]
 
 _NEG_INF = float("-inf")
 
@@ -59,14 +72,9 @@ def flash_fwd_builder(D):
             l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
             acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
 
-        # whole-block skip: strictly-above-diagonal (causal) or out-of-window
-        run = jnp.bool_(True)
-        if causal:
-            run &= (ki * bkv) <= (qi * bq + q_offset + bq - 1)
-        if window is not None:
-            run &= (qi * bq + q_offset) - (ki * bkv + bkv - 1) < window
-        if prefix:
-            run |= (ki * bkv) < prefix   # prefix keys always visible
+        run = _run_cond(qi, ki, causal=causal, window=window,
+                        prefix_len=prefix, block_q=bq, block_kv=bkv,
+                        q_offset=q_offset)
 
         @ctx.cell_when(run)
         def _step():
@@ -76,13 +84,8 @@ def flash_fwd_builder(D):
             k = k_ref[0, 0].astype(jnp.float32)          # (bkv, d)
             s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * sm_scale
-            mask = jnp.ones((bq, bkv), dtype=bool)
-            if causal:
-                mask &= q_pos[:, None] >= k_pos[None, :]
-            if window is not None:
-                mask &= (q_pos[:, None] - k_pos[None, :]) < window
-            if prefix:
-                mask |= jnp.broadcast_to(k_pos[None, :] < prefix, mask.shape)
+            mask = _mask_block(q_pos, k_pos, causal=causal, window=window,
+                               prefix_len=prefix)
             s = jnp.where(mask, s, _NEG_INF)
 
             m_prev = m_scr[:, :1]                         # (bq, 1)
@@ -132,84 +135,8 @@ def flash_fwd_builder(D):
         body=body)
 
 
-def _decode_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                   sm_scale, window, block_kv, kv_len, nk):
-    ki = pl.program_id(2)
-
-    @pl.when(ki == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-
-    k_pos = ki * block_kv + jax.lax.iota(jnp.int32, block_kv)
-    q_pos = kv_len - 1
-
-    run = jnp.bool_(True)
-    if window is not None:
-        run &= (q_pos - (ki * block_kv + block_kv - 1)) < window
-
-    @pl.when(run)
-    def _step():
-        q = q_ref[0, 0].astype(jnp.float32)            # (1, d) -> use as (d,)
-        k = k_ref[0, 0].astype(jnp.float32)            # (block_kv, d)
-        s = (k @ q[0]) * sm_scale                      # (block_kv,)
-        mask = k_pos <= q_pos
-        if window is not None:
-            mask &= (q_pos - k_pos) < window
-        s = jnp.where(mask, s, _NEG_INF)
-        m_prev = m_scr[0, 0]
-        m_cur = jnp.maximum(m_prev, s.max())
-        corr = jnp.where(m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_cur))
-        p = jnp.exp(s - m_cur)
-        p = jnp.where(mask, p, 0.0)
-        v = v_ref[0, 0].astype(jnp.float32)            # (block_kv, d)
-        acc_scr[...] = acc_scr[...] * corr + (p[None, :] @ v)
-        l_scr[0, 0] = l_scr[0, 0] * corr + p.sum()
-        m_scr[0, 0] = m_cur
-
-    @pl.when(ki == nk - 1)
-    def _fin():
-        l = l_scr[0, 0]
-        o_ref[0, 0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
-
-
-def flash_decode(q, k, v, *, window=None, sm_scale=None, block_kv=512,
-                 interpret=True):
-    """Single-token decode: q (B, H, 1, D) vs cache k/v (B, Hk, S, D)."""
-    b, h, one, d = q.shape
-    assert one == 1
-    _, hk, skv, _ = k.shape
-    g = h // hk
-    block_kv = min(block_kv, skv)
-    assert skv % block_kv == 0
-    nk = skv // block_kv
-    if sm_scale is None:
-        sm_scale = 1.0 / math.sqrt(d)
-
-    kernel = functools.partial(_decode_kernel, sm_scale=sm_scale, window=window,
-                               block_kv=block_kv, kv_len=skv, nk=nk)
-    return pl.pallas_call(
-        kernel,
-        grid=(b, h, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ki: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, ki: (b_, h_ // g, ki, 0)),
-            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, ki: (b_, h_ // g, ki, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ki: (b_, h_, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((1, 128), jnp.float32),
-            pltpu.VMEM((1, 128), jnp.float32),
-            pltpu.VMEM((1, d), jnp.float32),
-        ],
-        interpret=interpret,
-    )(q, k, v)
-
-
 # ---------------------------------------------------------------------------
-# backward kernels (flash bwd: dq / dk / dv with recomputed p from lse)
+# shared masking / recompute helpers (pure jnp — usable from any expansion)
 # ---------------------------------------------------------------------------
 
 def _mask_block(q_pos, k_pos, *, causal, window, prefix_len):
@@ -224,111 +151,171 @@ def _mask_block(q_pos, k_pos, *, causal, window, prefix_len):
 
 
 def _p_block(q, k, lse, mask, sm_scale):
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * sm_scale
+    s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32) * sm_scale
     p = jnp.exp(s - lse[:, None])
     return jnp.where(mask, p, 0.0)
 
 
 def _run_cond(qi, ki, *, causal, window, prefix_len, block_q, block_kv,
               q_offset):
+    """Whole-block skip: strictly-above-diagonal (causal) or out-of-window."""
     run = jnp.bool_(True)
     if causal:
         run &= (ki * block_kv) <= (qi * block_q + q_offset + block_q - 1)
     if window is not None:
         run &= (qi * block_q + q_offset) - (ki * block_kv + block_kv - 1) < window
     if prefix_len:
-        run |= (ki * block_kv) < prefix_len
+        run |= (ki * block_kv) < prefix_len   # prefix keys always visible
     return run
 
 
-def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-                    dk_ref, dv_ref, dk_scr, dv_scr, *, sm_scale, causal,
-                    window, prefix_len, block_q, block_kv, q_offset, nq):
-    ki = pl.program_id(2)
-    qi = pl.program_id(3)
+# ---------------------------------------------------------------------------
+# backward: delta precompute + ONE fused dq/dk/dv kernel
+# ---------------------------------------------------------------------------
 
-    @pl.when(qi == 0)
-    def _init():
-        dk_scr[...] = jnp.zeros_like(dk_scr)
-        dv_scr[...] = jnp.zeros_like(dv_scr)
+def flash_delta_builder(D):
+    """do, o: (b, h, sq, dv) -> delta: (b, h, sq) f32, rowwise sum(do * o).
 
-    run = _run_cond(qi, ki, causal=causal, window=window,
-                    prefix_len=prefix_len, block_q=block_q,
-                    block_kv=block_kv, q_offset=q_offset)
+    The multiply and the row reduction fuse in one grid cell — the (b,h,sq,dv)
+    product never materializes."""
+    b, h, sq, dv = D.b, D.h, D.sq, D.dv
+    bq = D.block_q
+    dtype = jnp.dtype(D.dtype)
 
-    @pl.when(run)
-    def _step():
-        q = q_ref[0, 0].astype(jnp.float32)
-        k = k_ref[0, 0].astype(jnp.float32)
-        v = v_ref[0, 0].astype(jnp.float32)
+    def body(ctx, do_ref, o_ref, delta_ref):
         do = do_ref[0, 0].astype(jnp.float32)
-        lse = lse_ref[0, 0]
-        delta = delta_ref[0, 0]
-        q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset
-        k_pos = ki * block_kv + jax.lax.iota(jnp.int32, block_kv)
-        mask = _mask_block(q_pos, k_pos, causal=causal, window=window,
-                           prefix_len=prefix_len)
-        p = _p_block(q, k, lse, mask, sm_scale)              # (bq, bkv)
-        dv_scr[...] += jax.lax.dot_general(
-            p, do, (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)              # p^T @ do
-        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+        o = o_ref[0, 0].astype(jnp.float32)
+        delta_ref[0, 0] = (do * o).sum(-1)
+
+    return Spec(
+        "flash_delta",
+        grid=(b, h, sq // bq),
+        inputs=[
+            Tile("do", (b, h, sq, dv), dtype, block=(1, 1, bq, dv),
+                 index=lambda b_, h_, qi: (b_, h_, qi, 0)),
+            Tile("o", (b, h, sq, dv), dtype, block=(1, 1, bq, dv),
+                 index=lambda b_, h_, qi: (b_, h_, qi, 0)),
+        ],
+        outputs=[
+            Tile("delta", (b, h, sq), jnp.float32, block=(1, 1, bq),
+                 index=lambda b_, h_, qi: (b_, h_, qi)),
+        ],
+        body=body)
+
+
+def flash_bwd_builder(D):
+    """Fused flash backward: q/k/v/do/lse/delta -> dq, dk, dv (per query head).
+
+    Grid (b, h, nq, nk) with BOTH block axes sequential (qi outer, ki inner).
+    ``p`` is recomputed once per (qi, ki) tile from the lse stats and feeds all
+    three cotangents — the per-output reduce granularity does the rest:
+
+      dq  (``reduce=(3,)``)  row state in scratch across the inner ki sweep,
+                             init at ``reduce_first(1)``, flushed at
+                             ``reduce_last(1)`` — nq distinct blocks along the
+                             OUTER sequential axis
+      dk/dv (``reduce=(2,)``) accumulate over the qi sweep directly in their
+                             revisited output blocks (init at
+                             ``reduce_first(0)``) — nk distinct blocks along
+                             the INNER sequential axis
+
+    GQA head-group reduction (dk/dv summed over the query-head group) happens
+    on the host in :func:`flash_attention_bwd`."""
+    b, h, hk = D.b, D.h, D.hk
+    sq, skv, d, dv = D.sq, D.skv, D.d, D.dv
+    bq, bkv = D.block_q, D.block_kv
+    causal, window, prefix = D.causal, D.window, D.prefix_len
+    sm_scale = D.sm_scale
+    g = h // hk
+    q_offset = skv - sq
+    nq, nk = sq // bq, skv // bkv
+    dtype = jnp.dtype(D.dtype)
+
+    def body(ctx, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+             dq_ref, dk_ref, dv_ref):
+        dq_scr, = ctx.scratch
+        qi = ctx.reduce_id(0)
+        ki = ctx.reduce_id(1)
+
+        @ctx.when(ctx.reduce_first(1))       # ki == 0: a fresh query row
+        def _init_dq():
+            dq_scr[...] = jnp.zeros(dq_scr.shape, jnp.float32)
+
+        @ctx.when(ctx.reduce_first(0))       # qi == 0: first visit of dk/dv
+        def _init_dkv():                     # blocks (undefined on real TPU)
+            dk_ref[0, 0] = jnp.zeros((bkv, d), jnp.float32)
+            dv_ref[0, 0] = jnp.zeros((bkv, dv), jnp.float32)
+
+        run = _run_cond(qi, ki, causal=causal, window=window,
+                        prefix_len=prefix, block_q=bq, block_kv=bkv,
+                        q_offset=q_offset)
+
+        @ctx.cell_when(run)
+        def _step():
+            q = q_ref[0, 0].astype(jnp.float32)
+            k = k_ref[0, 0].astype(jnp.float32)
+            v = v_ref[0, 0].astype(jnp.float32)
+            do = do_ref[0, 0].astype(jnp.float32)
+            lse = lse_ref[0, 0]
+            delta = delta_ref[0, 0]
+            q_pos = qi * bq + lax.iota(jnp.int32, bq) + q_offset
+            k_pos = ki * bkv + lax.iota(jnp.int32, bkv)
+            mask = _mask_block(q_pos, k_pos, causal=causal, window=window,
+                               prefix_len=prefix)
+            p = _p_block(q, k, lse, mask, sm_scale)              # (bq, bkv)
+            dv_ref[0, 0] = dv_ref[0, 0] + lax.dot_general(
+                p, do, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)              # p^T @ do
+            dp = lax.dot_general(do, v, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
-        ds = p * (dp - delta[:, None]) * sm_scale            # (bq, bkv)
-        dk_scr[...] += jax.lax.dot_general(
-            ds, q, (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)              # ds^T @ q
+            ds = p * (dp - delta[:, None]) * sm_scale            # (bq, bkv)
+            dk_ref[0, 0] = dk_ref[0, 0] + lax.dot_general(
+                ds, q, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)              # ds^T @ q
+            dq_scr[...] += lax.dot_general(
+                ds, k, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)              # ds @ k
 
-    @pl.when(qi == nq - 1)
-    def _fin():
-        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
-        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+        @ctx.when(ctx.reduce_last(1))        # ki == nk-1: flush the query row
+        def _flush_dq():
+            dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
 
-
-def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-                   dq_ref, dq_scr, *, sm_scale, causal, window, prefix_len,
-                   block_q, block_kv, q_offset, nk):
-    qi = pl.program_id(2)
-    ki = pl.program_id(3)
-
-    @pl.when(ki == 0)
-    def _init():
-        dq_scr[...] = jnp.zeros_like(dq_scr)
-
-    run = _run_cond(qi, ki, causal=causal, window=window,
-                    prefix_len=prefix_len, block_q=block_q,
-                    block_kv=block_kv, q_offset=q_offset)
-
-    @pl.when(run)
-    def _step():
-        q = q_ref[0, 0].astype(jnp.float32)
-        k = k_ref[0, 0].astype(jnp.float32)
-        v = v_ref[0, 0].astype(jnp.float32)
-        do = do_ref[0, 0].astype(jnp.float32)
-        lse = lse_ref[0, 0]
-        delta = delta_ref[0, 0]
-        q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset
-        k_pos = ki * block_kv + jax.lax.iota(jnp.int32, block_kv)
-        mask = _mask_block(q_pos, k_pos, causal=causal, window=window,
-                           prefix_len=prefix_len)
-        p = _p_block(q, k, lse, mask, sm_scale)
-        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
-        ds = p * (dp - delta[:, None]) * sm_scale
-        dq_scr[...] += jax.lax.dot_general(
-            ds, k, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)              # ds @ k
-
-    @pl.when(ki == nk - 1)
-    def _fin():
-        dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+    return Spec(
+        "flash_attention_bwd",
+        grid=(b, h, nq, nk),
+        reduce_axes=(2, 3),
+        scratch=[Scratch((bq, d), jnp.float32)],
+        inputs=[
+            Tile("q", (b, h, sq, d), dtype, block=(1, 1, bq, d),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            Tile("k", (b, hk, skv, d), dtype, block=(1, 1, bkv, d),
+                 index=lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+            Tile("v", (b, hk, skv, dv), dtype, block=(1, 1, bkv, dv),
+                 index=lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+            Tile("do", (b, h, sq, dv), dtype, block=(1, 1, bq, dv),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            Tile("lse", (b, h, sq), jnp.float32, block=(1, 1, bq),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi)),
+            Tile("delta", (b, h, sq), jnp.float32, block=(1, 1, bq),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi)),
+        ],
+        outputs=[
+            Tile("dq", (b, h, sq, d), dtype, block=(1, 1, bq, d),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi, 0), reduce=(3,)),
+            Tile("dk", (b, h, skv, d), jnp.float32, block=(1, 1, bkv, d),
+                 index=lambda b_, h_, qi, ki: (b_, h_, ki, 0), reduce=(2,)),
+            Tile("dv", (b, h, skv, dv), jnp.float32, block=(1, 1, bkv, dv),
+                 index=lambda b_, h_, qi, ki: (b_, h_, ki, 0), reduce=(2,)),
+        ],
+        body=body)
 
 
 def flash_attention_bwd(q, k, v, o, do, lse, *, causal=True, window=None,
                         sm_scale=None, prefix_len=0, block_q=128,
-                        block_kv=128, interpret=True):
-    """Flash backward. Returns (dq, dk, dv) with GQA group reduction."""
+                        block_kv=128, backend="pallas", interpret=None):
+    """Flash backward host path: delta kernel + fused dq/dk/dv kernel +
+    GQA head-group reduction. Returns (dq, dk, dv)."""
     b, h, sq, d = q.shape
     _, hk, skv, _ = k.shape
     dv_dim = v.shape[-1]
@@ -338,58 +325,111 @@ def flash_attention_bwd(q, k, v, o, do, lse, *, causal=True, window=None,
     assert sq % block_q == 0 and skv % block_kv == 0
     if sm_scale is None:
         sm_scale = 1.0 / math.sqrt(d)
-    nq, nk = sq // block_q, skv // block_kv
-    q_offset = skv - sq
-    kw = dict(sm_scale=sm_scale, causal=causal, window=window,
-              prefix_len=prefix_len, block_q=block_q, block_kv=block_kv,
-              q_offset=q_offset)
+    dev = default_device(backend, interpret)
+    dtype = jnp.dtype(q.dtype).name
+    do = do.astype(q.dtype)
 
-    # delta_i = sum_d do_i * o_i (rowwise) — tiny elementwise precompute
-    delta = (do.astype(jnp.float32) * o.astype(jnp.float32)).sum(-1)
+    delta_kern = dev.build_kernel(flash_delta_builder, dict(
+        b=b, h=h, sq=sq, dv=dv_dim, block_q=block_q, dtype=dtype))
+    delta, = delta_kern.run(do, o.astype(q.dtype))
 
-    q_spec = pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, ki, qi: (b_, h_, qi, 0))
-    do_spec = pl.BlockSpec((1, 1, block_q, dv_dim), lambda b_, h_, ki, qi: (b_, h_, qi, 0))
-    stat_spec = pl.BlockSpec((1, 1, block_q), lambda b_, h_, ki, qi: (b_, h_, qi))
-    k_spec = pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, ki, qi: (b_, h_ // g, ki, 0))
-    v_spec = pl.BlockSpec((1, 1, block_kv, dv_dim), lambda b_, h_, ki, qi: (b_, h_ // g, ki, 0))
-
-    dk_h, dv_h = pl.pallas_call(
-        functools.partial(_bwd_dkv_kernel, nq=nq, **kw),
-        grid=(b, h, nk, nq),
-        in_specs=[q_spec, k_spec, v_spec, do_spec, stat_spec, stat_spec],
-        out_specs=[
-            pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, ki, qi: (b_, h_, ki, 0)),
-            pl.BlockSpec((1, 1, block_kv, dv_dim), lambda b_, h_, ki, qi: (b_, h_, ki, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, h, skv, d), jnp.float32),
-            jax.ShapeDtypeStruct((b, h, skv, dv_dim), jnp.float32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_kv, d), jnp.float32),
-            pltpu.VMEM((block_kv, dv_dim), jnp.float32),
-        ],
-        interpret=interpret,
-    )(q, k, v, do, lse, delta)
-
-    q_spec2 = pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0))
-    do_spec2 = pl.BlockSpec((1, 1, block_q, dv_dim), lambda b_, h_, qi, ki: (b_, h_, qi, 0))
-    stat_spec2 = pl.BlockSpec((1, 1, block_q), lambda b_, h_, qi, ki: (b_, h_, qi))
-    k_spec2 = pl.BlockSpec((1, 1, block_kv, d), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0))
-    v_spec2 = pl.BlockSpec((1, 1, block_kv, dv_dim), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0))
-
-    dq = pl.pallas_call(
-        functools.partial(_bwd_dq_kernel, nk=nk, **kw),
-        grid=(b, h, nq, nk),
-        in_specs=[q_spec2, k_spec2, v_spec2, do_spec2, stat_spec2, stat_spec2],
-        out_specs=pl.BlockSpec((1, 1, block_q, d),
-                               lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
-        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
-        interpret=interpret,
-    )(q, k, v, do, lse, delta)
+    bwd_kern = dev.build_kernel(flash_bwd_builder, dict(
+        b=b, h=h, hk=hk, sq=sq, skv=skv, d=d, dv=dv_dim,
+        block_q=block_q, block_kv=block_kv, causal=bool(causal),
+        window=None if window is None else int(window),
+        prefix_len=int(prefix_len), sm_scale=float(sm_scale), dtype=dtype))
+    dq, dk_h, dv_h = bwd_kern.run(q, k, v, do, lse, delta)
 
     # GQA: reduce dk/dv over the query-head group
     dk = dk_h.reshape(b, hk, g, skv, d).sum(2).astype(k.dtype)
     dv = dv_h.reshape(b, hk, g, skv, dv_dim).sum(2).astype(v.dtype)
     return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# single-token decode
+# ---------------------------------------------------------------------------
+
+def flash_decode_builder(D):
+    """q: (b, h, 1, d) vs cache k: (b, hk, skv, d), v: (b, hk, skv, dv),
+    kv_len: (1, 1) i32 -> o: (b, h, 1, dv).
+
+    Same online-softmax reduce over kv blocks as the forward, with a DYNAMIC
+    valid length: only the first ``kv_len`` cache slots are attended (the
+    query sits at position ``kv_len - 1``), so one compiled kernel serves a
+    growing cache — blocks past ``kv_len`` (or outside the sliding window)
+    are ``cell_when``-skipped at run time."""
+    b, h, hk = D.b, D.h, D.hk
+    skv, d, dv = D.skv, D.d, D.dv
+    bkv = D.block_kv
+    window = D.window
+    sm_scale = D.sm_scale
+    g = h // hk
+    dtype = jnp.dtype(D.dtype)
+
+    def body(ctx, q_ref, k_ref, v_ref, len_ref, o_ref):
+        m_scr, l_scr, acc_scr = ctx.scratch
+        ki = ctx.reduce_id(0)
+
+        @ctx.when(ctx.is_first)
+        def _init():
+            m_scr[...] = jnp.full(m_scr.shape, _NEG_INF, jnp.float32)
+            l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+            acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+        q_pos = len_ref[0, 0] - 1            # query at the end of the stream
+        run = (ki * bkv) <= q_pos
+        if window is not None:
+            run &= (q_pos - (ki * bkv + bkv - 1)) < window
+
+        @ctx.cell_when(run)
+        def _step():
+            k_pos = ki * bkv + lax.iota(jnp.int32, bkv)
+            q = q_ref[0, 0].astype(jnp.float32)          # (1, d)
+            k = k_ref[0, 0].astype(jnp.float32)          # (bkv, d)
+            s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+            mask = (k_pos <= q_pos)[None, :]             # (1, bkv)
+            if window is not None:
+                mask &= ((q_pos - k_pos) < window)[None, :]
+            s = jnp.where(mask, s, _NEG_INF)
+            m_prev = m_scr[:, :1]
+            l_prev = l_scr[:, :1]
+            m_cur = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+            corr = jnp.where(m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_cur))
+            p = jnp.exp(s - m_cur)
+            p = jnp.where(mask, p, 0.0)
+            v = v_ref[0, 0].astype(jnp.float32)
+            acc_scr[...] = acc_scr[...] * corr + lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            l_scr[:, :1] = l_prev * corr + p.sum(-1, keepdims=True)
+            m_scr[:, :1] = m_cur
+
+        @ctx.when(ctx.is_last)
+        def _fin():
+            l = l_scr[:, :1]
+            o_ref[0, 0] = (acc_scr[...] /
+                           jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+    return Spec(
+        "flash_decode",
+        grid=(b, h, skv // bkv),
+        reduce_axes=(2,),
+        scratch=[Scratch((1, 128), jnp.float32),   # m
+                 Scratch((1, 128), jnp.float32),   # l
+                 Scratch((1, dv), jnp.float32)],   # acc
+        inputs=[
+            Tile("q", (b, h, 1, d), dtype, block=(1, 1, 1, d),
+                 index=lambda b_, h_, ki: (b_, h_, 0, 0)),
+            Tile("k", (b, hk, skv, d), dtype, block=(1, 1, bkv, d),
+                 index=lambda b_, h_, ki: (b_, h_ // g, ki, 0)),
+            Tile("v", (b, hk, skv, dv), dtype, block=(1, 1, bkv, dv),
+                 index=lambda b_, h_, ki: (b_, h_ // g, ki, 0)),
+            Tile("kv_len", (1, 1), jnp.int32),     # whole-array (dynamic len)
+        ],
+        outputs=[
+            Tile("o", (b, h, 1, dv), dtype, block=(1, 1, 1, dv),
+                 index=lambda b_, h_, ki: (b_, h_, 0, 0)),
+        ],
+        body=body)

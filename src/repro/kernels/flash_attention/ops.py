@@ -1,25 +1,30 @@
-"""Public flash-attention op — a ``define_op`` declaration.
+"""Public flash-attention ops — ``define_op`` declarations, fwd AND bwd.
 
-The forward runs the unified-language kernel (``flash_fwd_builder``) on any
-backend; the backward is the hand-tiled Pallas kernel pair (dq / dkv) wired
-through the front-end's VJP declaration. No O(S^2) residuals are saved —
-only (q, k, v, o, lse); the backward recomputes p blockwise from the lse
-stats. ``decode_attention`` stays a bespoke single-token kernel (no grad
-needed at serving time).
+``flash_attention`` is one declaration with a fully unified custom VJP: the
+forward runs ``flash_fwd_builder`` on any backend; the backward runs the
+delta-precompute and the ONE fused dq/dk/dv kernel (``flash_bwd_builder``,
+per-output reduce granularity) on the SAME backend, wired through the
+front-end's VJP declaration. No O(S^2) residuals are saved — only
+(q, k, v, o, lse); the backward recomputes p blockwise from the lse stats.
+
+``flash_decode`` is a second declaration for single-token serving: the same
+online-softmax kernel specialized to one query row, with a dynamic ``kv_len``
+input masking the unfilled tail of the cache (no grad needed at serving
+time). ``decode_attention`` is its thin public wrapper.
 """
 
 from __future__ import annotations
 
 import math
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import OpVJP, define_op, fit_block
-from .kernel import flash_attention_bwd, flash_decode, flash_fwd_builder
-from .ref import mha_ref
+from .kernel import flash_attention_bwd, flash_decode_builder, flash_fwd_builder
+from .ref import decode_ref, mha_ref
 
-__all__ = ["flash_attention", "decode_attention", "flash_attention_fwd"]
+__all__ = ["flash_attention", "flash_decode", "decode_attention",
+           "flash_attention_fwd"]
 
 
 def _defines(args, params):
@@ -64,9 +69,7 @@ def _residuals(outs, args, params):
 
 def _bwd(params, res, g):
     q, k, v, o, lse = res
-    interpret = params.get("interpret")
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    backend = params["backend"]   # already resolved by the VJP front-end
     # re-derive through _defines so fwd and bwd share ONE fitting policy
     # (block sizes, sm_scale default) — the raw requested blocks may not
     # divide the sequence lengths
@@ -74,7 +77,8 @@ def _bwd(params, res, g):
     return flash_attention_bwd(
         q, k, v, o, g, lse, causal=D["causal"], window=D["window"],
         sm_scale=D["sm_scale"], prefix_len=D["prefix_len"],
-        block_q=D["block_q"], block_kv=D["block_kv"], interpret=interpret)
+        block_q=D["block_q"], block_kv=D["block_kv"], backend=backend,
+        interpret=params.get("interpret"))
 
 
 def _tune_ref(args, params):
@@ -105,7 +109,8 @@ flash_attention = define_op(
     example=_example,
     doc="""Differentiable flash attention. q (B,H,Sq,Dqk), k (B,Hk,Skv,Dqk),
     v (B,Hk,Skv,Dv); supports GQA/MQA, causal, sliding-window and prefix-LM
-    masking. One unified-language forward, hand-tiled Pallas backward.""",
+    masking. Unified-language forward AND backward (one fused dq/dk/dv
+    kernel) on every backend.""",
 )
 
 
@@ -119,7 +124,94 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=None, sm_scale=None,
         backend=backend, interpret=interpret)
 
 
-def decode_attention(q, k, v, *, window=None, sm_scale=None, block_kv=512):
-    """Single-token decode attention (no grad needed at serving time)."""
+# ---------------------------------------------------------------------------
+# single-token decode
+# ---------------------------------------------------------------------------
+
+def _decode_pre(args, params):
+    q, k, v = args
+    kv_len = params.pop("kv_len", None)
+    if kv_len is None:
+        kv_len = k.shape[2]                  # full cache valid
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1, 1)
+    return q, k, v, kv_len
+
+
+def _decode_defines(args, params):
+    q, k, v, kv_len = args
+    b, h, one, d = q.shape
+    if one != 1:
+        raise ValueError(f"flash_decode: expected a single query token, "
+                         f"got q of shape {q.shape}")
+    _, hk, skv, _ = k.shape
+    dv = v.shape[-1]
+    if h % hk:
+        raise ValueError(f"flash_decode: {h} query heads not a multiple of "
+                         f"{hk} kv heads")
+    if q.dtype != k.dtype or q.dtype != v.dtype:
+        raise ValueError(f"flash_decode: dtypes disagree "
+                         f"({q.dtype}/{k.dtype}/{v.dtype})")
+    want = params["block_kv"]
+    bkv = fit_block(want, skv)
+    ncells = b * h * (skv // bkv)
+    if bkv < min(want, skv) and ncells > 1 << 16:
+        raise ValueError(
+            f"flash_decode: cache len {skv} degraded block_kv to {bkv} = "
+            f"{ncells} grid cells; pad the cache or pass a dividing block_kv")
+    sm_scale = params["sm_scale"]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    window = params["window"]
+    return dict(
+        b=b, h=h, hk=hk, skv=skv, d=d, dv=dv, block_kv=bkv,
+        window=None if window is None else int(window),
+        sm_scale=float(sm_scale),
+        dtype=jnp.dtype(q.dtype).name)
+
+
+def _decode_tune_ref(args, params):
+    import numpy as np
+
+    q, k, v, kv_len = args
+    n = int(np.asarray(kv_len).reshape(-1)[0])
+    return decode_ref(q, k[:, :, :n], v[:, :, :n], window=params["window"],
+                      sm_scale=params["sm_scale"])
+
+
+def _decode_example(rng):
+    q = rng.randn(1, 4, 1, 32).astype("float32")
+    k = rng.randn(1, 2, 128, 32).astype("float32")
+    v = rng.randn(1, 2, 128, 32).astype("float32")
+    return (q, k, v), dict(block_kv=32)
+
+
+flash_decode = define_op(
+    "flash_decode",
+    builder=flash_decode_builder,
+    ref=decode_ref,
+    derive_defines=_decode_defines,
+    pre=_decode_pre,
+    defaults=dict(window=None, sm_scale=None, block_kv=512),
+    array_params=("kv_len",),               # dynamic valid cache length
+    ref_params=("window", "sm_scale"),
+    tune_ref=_decode_tune_ref,
+    sweep=dict(block_kv=[128, 256, 512, 1024]),
+    example=_decode_example,
+    doc="""Single-token decode attention: q (B,H,1,D) against a kv cache
+    (B,Hk,S,D). ``kv_len`` (int or traced scalar) masks the unfilled tail of
+    the cache — the query sits at position kv_len-1 — so one compiled kernel
+    serves every step of an incremental-decode loop.""",
+)
+
+
+def decode_attention(q, k, v, *, window=None, sm_scale=None, block_kv=None,
+                     kv_len=None, backend="auto", interpret=None):
+    """Single-token decode attention (no grad needed at serving time).
+
+    ``block_kv=None`` (the default) defers to the op's current default —
+    which serving warmup may have replaced with a persisted tune winner; an
+    explicit value always wins."""
+    kw = {} if block_kv is None else {"block_kv": block_kv}
     return flash_decode(q, k, v, window=window, sm_scale=sm_scale,
-                        block_kv=block_kv)
+                        kv_len=kv_len, backend=backend, interpret=interpret,
+                        **kw)

@@ -1,7 +1,7 @@
 """Fused RMSNorm expressed in the unified kernel language.
 
 One builder expands to all three backends (``jnp`` / ``loops`` / ``pallas``);
-the former bespoke ``pl.pallas_call`` is gone. Rows stay resident in VMEM per
+the former bespoke Pallas call site is gone. Rows stay resident in VMEM per
 grid cell, so the sum-of-squares reduction is within-tile (no reduce axis
 needed — contrast ``repro.kernels.matmul``, which carries scratch across a
 sequential reduce axis). The host path (backend pick, block fitting, build

@@ -8,8 +8,8 @@ fusion and the B-outer-product happen in-register — nothing (Bt, L, Dm, N)-
 shaped ever touches HBM, which is the entire point of the kernel.
 
 The per-chunk ``y`` writes are a *streamed* output (``Tile(stream=True)``):
-each grid cell writes its own chunk block, so the kernel — formerly a bespoke
-``pl.pallas_call`` — is now one source expanding to jnp/loops/pallas. The
+each grid cell writes its own chunk block, so the kernel — formerly a
+bespoke Pallas call — is now one source expanding to jnp/loops/pallas. The
 host path lives in the ``define_op`` declaration in ``ops.py``.
 """
 

@@ -4,6 +4,13 @@ Static batching with greedy sampling and EOS masking (per-slot continuous
 batching requires per-sequence cache positions; the cache layout supports it
 — slot refill is left to the cluster frontend). Reports tokens/s.
 
+Warmup consults the persistent autotune cache (``$REPRO_CACHE_DIR``) through
+the op registry: any attention op with a persisted ``op.tune`` winner for the
+serving shapes gets its defaults updated, so the prefill/decode paths pick
+the TUNED block sizes instead of the ops' hardcoded defaults. Run
+``op.tune(...)`` once on the target hardware; every later serve adopts the
+winners for free.
+
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --reduced \
       --batch 4 --prompt-len 16 --gen 32
 """
@@ -22,7 +29,55 @@ from repro.models import LM
 from repro.parallel.steps import build_prefill_step, build_serve_step
 from repro.launch.mesh import make_local_mesh
 
-__all__ = ["generate", "main"]
+__all__ = ["apply_tuned_winners", "generate", "main"]
+
+
+def apply_tuned_winners(cfg, batch: int, prompt_len: int, max_len: int):
+    """Serving warmup: adopt persisted ``op.tune`` winners for the attention
+    ops at THESE serving shapes — a pure cache lookup via the op registry
+    (``Op.cached_winner``), no builds or timed sweeps. Ops with a winner get
+    their defaults updated in-process so every subsequent layer call uses the
+    tuned block sizes. Returns ``{op_name: winner_defines}``."""
+    import repro.kernels  # noqa: F401 — registers the op families
+    from repro.core import registered_ops
+
+    h = getattr(cfg, "n_heads", 0)
+    hk = getattr(cfg, "n_kv_heads", 0) or h
+    hd = getattr(cfg, "resolved_head_dim", 0)
+    if not (h and hd):
+        return {}  # latent-attention archs (MLA) have no flash probes here
+    dtype = jnp.dtype(getattr(cfg, "dtype", "float32"))
+    window = getattr(cfg, "window", None)
+    m = min(max_len, window) if window else max_len
+    probe = jax.ShapeDtypeStruct  # shapes are all cached_winner derives from
+    probes = {
+        "flash_attention": (
+            (probe((batch, h, prompt_len, hd), dtype),
+             probe((batch, hk, prompt_len, hd), dtype),
+             probe((batch, hk, prompt_len, hd), dtype)),
+            dict(causal=True, window=window)),
+    }
+    if window is None:
+        # windowed archs decode on the einsum path (rotated cache slots) —
+        # adopting a decode winner there would mutate the op for nothing
+        probes["flash_decode"] = (
+            (probe((batch, h, 1, hd), dtype),
+             probe((batch, hk, m, hd), dtype),
+             probe((batch, hk, m, hd), dtype)),
+            dict(window=None))
+    applied = {}
+    for name, (args, params) in probes.items():
+        op = registered_ops().get(name)
+        if op is None:
+            continue
+        try:
+            winner = op.cached_winner(args, **params)
+        except Exception:
+            continue  # probe shape invalid for this arch: no winner to adopt
+        if winner:
+            op.defaults.update(winner)
+            applied[name] = winner
+    return applied
 
 
 def generate(model: LM, params, prompts: np.ndarray, *, gen_tokens: int,
@@ -33,6 +88,10 @@ def generate(model: LM, params, prompts: np.ndarray, *, gen_tokens: int,
     b, plen = prompts.shape
     max_len = plen + gen_tokens
     mesh = mesh or make_local_mesh(model=1)
+
+    # adopt persisted autotune winners BEFORE the steps trace: the traced
+    # kernels bake in whatever block sizes the ops resolve to
+    tuned = apply_tuned_winners(cfg, b, plen, max_len)
 
     prefill_fn, _ = build_prefill_step(model, mesh, batch=b, max_len=max_len)
     serve_fn, sh = build_serve_step(model, mesh, batch=b, max_len=max_len)
@@ -63,7 +122,8 @@ def generate(model: LM, params, prompts: np.ndarray, *, gen_tokens: int,
     decode_s = time.time() - t0
     n_gen = out.shape[1] * b
     return out, {"prefill_s": prefill_s, "decode_s": decode_s,
-                 "tokens_per_s": n_gen / max(decode_s, 1e-9)}
+                 "tokens_per_s": n_gen / max(decode_s, 1e-9),
+                 "tuned": tuned}
 
 
 def main(argv=None):
@@ -84,6 +144,8 @@ def main(argv=None):
     prompts = np.random.RandomState(args.seed).randint(
         0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
     out, stats = generate(model, params, prompts, gen_tokens=args.gen)
+    if stats["tuned"]:
+        print(f"[serve] adopted persisted tune winners: {stats['tuned']}")
     print(f"[serve] batch={args.batch} prompt={args.prompt_len} "
           f"gen={out.shape[1]}: prefill {stats['prefill_s']:.2f}s, "
           f"{stats['tokens_per_s']:.1f} tok/s decode")

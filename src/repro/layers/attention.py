@@ -3,8 +3,10 @@
 Each variant provides init / forward (train+prefill) / cache init / decode.
 The perf-critical realization is selected at run time via
 ``use_kernel_backend``: "pallas" -> repro.kernels flash kernels, "jnp" ->
-oracle paths (mha_ref for short, mha_chunked for long sequences). Decode uses
-masked grouped einsums over a preallocated cache updated in place.
+oracle paths (mha_ref for short, mha_chunked for long sequences). Decode
+under "pallas" runs the registered ``flash_decode`` op against the
+preallocated cache (dynamic ``kv_len`` masks the unfilled tail); the "jnp"
+path and rolling-window caches use masked grouped einsums.
 """
 
 from __future__ import annotations
@@ -12,7 +14,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention import flash_attention, mha_chunked, mha_ref
+from repro.kernels.flash_attention import (decode_attention, flash_attention,
+                                           mha_chunked, mha_ref)
 from repro.parallel.context import shard_activation
 
 from .common import dense_init, kernel_backend, rmsnorm
@@ -163,7 +166,16 @@ def gqa_decode(params, x, cache, cfg):
         mask = jnp.arange(m) <= write
     cache["pos"] = pos + 1
 
-    o = _masked_decode_attn(q, cache["k"], cache["v"], mask, hd ** -0.5)
+    if kernel_backend() == "pallas" and not cfg.window:
+        # the registered flash_decode op: one compiled kernel for the whole
+        # decode loop, the growing valid length passed as a traced kv_len.
+        # Rolling-window caches store ROTATED slots (slot = pos % W) — their
+        # data-dependent mask has no positional form, so they stay on the
+        # grouped-einsum path.
+        o = decode_attention(q, cache["k"], cache["v"], kv_len=write + 1,
+                             sm_scale=hd ** -0.5)
+    else:
+        o = _masked_decode_attn(q, cache["k"], cache["v"], mask, hd ** -0.5)
     y = o.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ params["wo"]
     return y, cache
 
