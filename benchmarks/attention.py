@@ -69,6 +69,28 @@ def run(rows: list, smoke: bool = False):
     rows.append(Row(f"attn/flash_decode/s{s}", sec,
                     f"{dec_flops / sec / 1e9:.1f} GFLOP/s"))
 
+    # rolling-window decode against a ROTATED cache (slot = pos % W), decoded
+    # past the wrap: the masked grouped einsum (the old fallback path) vs the
+    # unified kernel with the slot_pos input tile
+    W = 64 if smoke else 1024
+    t = W + W // 2                           # wrapped: every slot live
+    sp = np.full((W,), -1, np.int32)
+    for p in range(t - W, t):
+        sp[p % W] = p
+    sp = jnp.asarray(sp)
+    kw_, vw_ = k[:, :, :W], v[:, :, :W]
+    wflops = 4 * b * h * W * d
+    sec = time_fn(jax.jit(lambda q_, k_, v_: decode_ref(
+        q_, k_, v_, window=W, kv_len=t, slot_pos=sp)), q1, kw_, vw_, **tkw)
+    rows.append(Row(f"attn/wdecode_einsum/w{W}", sec,
+                    f"{wflops / sec / 1e9:.1f} GFLOP/s"))
+    wbkv = min(bkv, W)
+    sec = time_fn(jax.jit(lambda q_, k_, v_: decode_attention(
+        q_, k_, v_, window=W, kv_len=t, slot_pos=sp, block_kv=wbkv,
+        backend="jnp")), q1, kw_, vw_, **tkw)
+    rows.append(Row(f"attn/wdecode_flash/w{W}", sec,
+                    f"{wflops / sec / 1e9:.1f} GFLOP/s"))
+
     # ssm scans
     bt, L, dm, n = (1, 128, 64, 8) if smoke else (1, 2048, 512, 16)
     x = jnp.asarray(rng.randn(bt, L, dm), jnp.float32)

@@ -85,4 +85,23 @@ def run(rows, smoke: bool = False):
         rows.append(Row(f"unified/flash_decode/{backend}", sec,
                         f"s={s2} bkv={bq} "
                         f"gflops={dfl / sec / 1e9:.1f}"))
+
+    # WINDOWED flash decode: a rotated rolling cache (slot = pos % W) decoded
+    # past the wrap — the slot_pos input tile carries the data-dependent mask
+    # through the SAME kernel on every backend (was: einsum-only fallback)
+    W = s2 // 2
+    t = W + W // 2
+    sp = np.full((W,), -1, np.int32)
+    for p in range(t - W, t):
+        sp[p % W] = p
+    wkk, wvv = kk[:, :, :W], vv[:, :, :W]
+    wfl = 4 * b2 * h2 * W * d2
+    wbkv = min(bq, W)
+    for backend in BACKENDS:
+        sec = time_fn(lambda q_, k_, v_, be=backend: decode_attention(
+            q_, k_, v_, window=W, kv_len=t, slot_pos=sp, block_kv=wbkv,
+            backend=be), q1, wkk, wvv, **tkw)
+        rows.append(Row(f"unified/flash_decode_window/{backend}", sec,
+                        f"W={W} bkv={wbkv} "
+                        f"gflops={wfl / sec / 1e9:.1f}"))
     return rows

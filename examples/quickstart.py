@@ -99,6 +99,40 @@ def main():
         print(f"{backend:>7s}: flash_attention grad OK "
               f"(|dq| = {float(jnp.abs(dq).mean()):.3f})")
 
+    # 8. DYNAMIC input tiles: run-time data the kernel reads WITHOUT
+    #    recompiling — the decode-attention pattern. Two flavors:
+    #      whole-array  (block=None) — visible to every grid cell; use for
+    #                   scalars like flash_decode's (1,1) kv_len, which
+    #                   drives a ctx.cell_when predicate so cache blocks past
+    #                   the valid length are skipped at RUN time
+    #      blocked      — streamed per grid cell like any data tile; use for
+    #                   per-slot state like flash_decode's (1,S) slot_pos
+    #                   map: a rolling-window cache stores ROTATED slots
+    #                   (slot = pos % W), and the mask reads each slot's
+    #                   absolute position instead of assuming order
+    #    One compiled kernel then serves every step of a growing — even
+    #    wrapping — cache. cell_when can still skip whole blocks whenever
+    #    the predicate is computable from the dynamic scalars (here: while
+    #    kv_len <= S the cache hasn't rotated, so past-the-query blocks
+    #    never issue MXU work).
+    from repro.kernels.flash_attention import decode_attention, decode_ref
+
+    W = 16                                   # rolling cache of W slots
+    t = 25                                   # decoded PAST the wrap (t > W)
+    kc = rng.randn(1, 2, W, 32).astype(np.float32)
+    vc = rng.randn(1, 2, W, 32).astype(np.float32)
+    q1 = rng.randn(1, 2, 1, 32).astype(np.float32)
+    slot_pos = np.full((W,), -1, np.int32)
+    for p in range(t - W, t):
+        slot_pos[p % W] = p                  # slot -> absolute position
+    got = decode_attention(q1, kc, vc, window=W, kv_len=t, slot_pos=slot_pos,
+                           backend="jnp")
+    want = decode_ref(q1, kc, vc, window=W, kv_len=t, slot_pos=slot_pos)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    print(f"dynamic input tiles: rotated-cache decode OK "
+          f"(wrap at {W}, step {t})")
+
     print("one declaration -> every backend, tuned, differentiable, "
           "identical results")
 

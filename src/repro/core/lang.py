@@ -59,6 +59,21 @@ Keyword mapping (paper appendix tables → this module):
                                use (consecutive revisits — the accumulated
                                axis innermost, as in dq or matmul — are the
                                long-validated safe pattern everywhere)
+  dynamic input tiles          run-time data read by bodies and predicates
+  (run-time kernel args /      without recompiling: a WHOLE-ARRAY input tile
+  indirection arrays — the     (``block=None``) is visible to every grid cell
+  unstructured-mesh pattern)   (flash-decode's ``(1, 1)`` ``kv_len`` scalar,
+                               read by a ``cell_when`` block skip), while a
+                               BLOCKED input tile streams per-cell data-
+                               dependent state (flash-decode's ``(1, skv)``
+                               ``slot_pos`` map — a rotated cache's
+                               slot->position indirection, blocked along the
+                               kv axis exactly like k/v). Input index maps
+                               are bounds-checked over the whole grid at
+                               build time; the jnp expansion hoists inputs
+                               whose index map ignores the reduce ids out of
+                               the sequential reduce loop (one slice per
+                               outer cell instead of one per reduce step)
   occaPrivate(Array)           ``ctx.private(x)`` — per-tile values (registers)
   occaCPU/occaGPU/occaOpenMP…  ``ctx.backend`` / ``ctx.is_pallas`` etc.
   occaKernelInfoArg            the ``ctx`` argument itself
@@ -225,11 +240,38 @@ class Spec:
             if not isinstance(s, Scratch):
                 raise TypeError(f"scratch entries must be lang.Scratch, got {type(s)}")
 
-        # Surface non-dividing blocks at build time for ALL tiles — autotune
-        # relies on invalid candidates failing inside build_kernel, not at the
-        # first (jitted) run.
+        # Surface non-dividing blocks AND out-of-range index maps at build
+        # time for ALL input tiles — autotune relies on invalid candidates
+        # failing inside build_kernel, not at the first (jitted) run. While
+        # walking the grid, also record which inputs' block index ignores the
+        # reduce ids: the jnp expansion hoists those slices out of the
+        # sequential reduce loop (e.g. flash-decode's q tile is sliced once
+        # per (b, h) cell, not once per kv block).
+        self._input_reduce_invariant = []
+        zero_r = (0,) * len(self.reduce_axes)
         for t in self.inputs:
-            t.resolved_block()
+            blk = t.resolved_block()
+            idx = t.resolved_index(self.grid)
+            nb = tuple(s // bb for s, bb in zip(t.shape, blk))
+            inv = True
+            bi0 = None
+            for cell in np.ndindex(*self.grid):
+                bi = tuple(int(i) for i in idx(*cell))
+                if len(bi) != len(nb) or any(
+                        not (0 <= i < n) for i, n in zip(bi, nb)):
+                    raise ValueError(
+                        f"input tile {t.name!r}: index map returned block "
+                        f"{bi} for grid cell {cell}, outside the {nb} block "
+                        f"grid (shape {t.shape}, block {blk})")
+                if inv and self.reduce_axes:
+                    # C-order walk: each outer group starts at reduce ids 0,
+                    # so that cell's bi IS the group's reference — one index-
+                    # map call per cell, not two
+                    if cell[k:] == zero_r:
+                        bi0 = bi
+                    elif bi != bi0:
+                        inv = False
+            self._input_reduce_invariant.append(inv)
 
         # Per-output reduce granularity: an output accumulates over SOME of
         # the reduce axes (all by default; none when streamed) and its index
@@ -589,9 +631,19 @@ def _expand_jnp(spec: Spec, defines: SimpleNamespace):
         slot_pos.append(tuple(spec.reduce_axes.index(a) for a in axes))
         slot_dims.append(tuple(spec.grid[a] for a in axes))
 
+    # inputs whose block index ignores the reduce ids (statically probed at
+    # Spec build): slice ONCE per outer cell, not once per reduce step
+    hoistable = spec._input_reduce_invariant if red_grid else \
+        [False] * len(spec.inputs)
+    zero_r = (0,) * len(spec.reduce_axes)
+
     def fn(*in_arrays):
         def cell(flat_idx):
             ogids = jnp.unravel_index(flat_idx, outer_grid) if outer_grid else ()
+            pinned = [
+                _slice_tile(t, a, tuple(ogids) + zero_r, grid).value
+                if h else None
+                for t, a, h in zip(spec.inputs, in_arrays, hoistable)]
             stk0 = tuple(
                 jnp.zeros((math.prod(sd) if sd else 1,) + t.resolved_block(),
                           t.dtype)
@@ -602,8 +654,12 @@ def _expand_jnp(spec: Spec, defines: SimpleNamespace):
                 stacks, scr_vals = carry
                 rgids = jnp.unravel_index(r, red_grid) if red_grid else ()
                 gids = tuple(ogids) + tuple(rgids)
-                ins = [_slice_tile(t, a, gids, grid)
-                       for t, a in zip(spec.inputs, in_arrays)]
+                # hoisted inputs get a FRESH TileRef per step: input refs are
+                # read-only by contract, but a stray in-body write must not
+                # leak across reduce steps
+                ins = [TileRef(p) if h else _slice_tile(t, a, gids, grid)
+                       for t, a, h, p in zip(spec.inputs, in_arrays,
+                                             hoistable, pinned)]
                 slots, cur = [], []
                 for t, stack, pos, sd in zip(spec.outputs, stacks, slot_pos,
                                              slot_dims):

@@ -22,8 +22,10 @@ jnp/loops/pallas — the bespoke hand-tiled Pallas era is over:
   both orderings in one grid, recomputing ``p`` once per (qi, ki) tile
   instead of twice.
 * ``flash_decode_builder`` single-token decode against a (possibly partially
-  filled) kv cache; the valid length is a dynamic ``kv_len`` input, so one
-  compiled kernel serves every step of an incremental-decode loop.
+  filled, possibly ROTATED rolling-window) kv cache; the valid length is a
+  dynamic ``kv_len`` input and the slot->absolute-position map a dynamic
+  ``slot_pos`` input tile, so one compiled kernel serves every step of an
+  incremental-decode loop — including past the wrap of a rolling cache.
 
 Host paths live in the ``define_op`` declarations in ``ops.py``;
 ``flash_attention_bwd`` below is the backward's host wrapper (kernel builds
@@ -352,13 +354,25 @@ def flash_attention_bwd(q, k, v, o, do, lse, *, causal=True, window=None,
 
 def flash_decode_builder(D):
     """q: (b, h, 1, d) vs cache k: (b, hk, skv, d), v: (b, hk, skv, dv),
-    kv_len: (1, 1) i32 -> o: (b, h, 1, dv).
+    kv_len: (1, 1) i32, slot_pos: (1, skv) i32 -> o: (b, h, 1, dv).
 
-    Same online-softmax reduce over kv blocks as the forward, with a DYNAMIC
-    valid length: only the first ``kv_len`` cache slots are attended (the
-    query sits at position ``kv_len - 1``), so one compiled kernel serves a
-    growing cache — blocks past ``kv_len`` (or outside the sliding window)
-    are ``cell_when``-skipped at run time."""
+    Same online-softmax reduce over kv blocks as the forward, with TWO
+    dynamic inputs serving one compiled kernel for every step of a decode
+    loop: ``kv_len`` (a whole-array scalar tile) is the number of tokens
+    decoded so far — the query sits at absolute position ``kv_len - 1`` —
+    and ``slot_pos`` (blocked along the kv axis like k/v) carries each cache
+    slot's ABSOLUTE position, ``-1`` for never-written slots. The mask reads
+    ``slot_pos`` instead of assuming positional order, so a rolling-window
+    cache storing ROTATED slots (slot = pos % W) runs the same kernel: slot
+    ``i`` is attended iff ``(slot_pos >= 0) & (slot_pos <= q_pos) &
+    (q_pos - slot_pos < window)``. Positional caches pass the identity map
+    (the op front-end's default), which recovers the old iota mask exactly.
+
+    The ``kv_len``-driven ``cell_when`` whole-block skip survives for the
+    un-wrapped prefix: while ``kv_len <= skv`` a rolling cache has not yet
+    rotated (slot == position), so blocks past the query — or fully below
+    the window — are skipped without issuing MXU work; once wrapped
+    (``kv_len > skv``) every slot may be live and all blocks run."""
     b, h, hk = D.b, D.h, D.hk
     skv, d, dv = D.skv, D.d, D.dv
     bkv = D.block_kv
@@ -367,7 +381,7 @@ def flash_decode_builder(D):
     g = h // hk
     dtype = jnp.dtype(D.dtype)
 
-    def body(ctx, q_ref, k_ref, v_ref, len_ref, o_ref):
+    def body(ctx, q_ref, k_ref, v_ref, len_ref, sp_ref, o_ref):
         m_scr, l_scr, acc_scr = ctx.scratch
         ki = ctx.reduce_id(0)
 
@@ -381,17 +395,20 @@ def flash_decode_builder(D):
         run = (ki * bkv) <= q_pos
         if window is not None:
             run &= (q_pos - (ki * bkv + bkv - 1)) < window
+        # wrapped rotated cache: slots lose positional order, every block may
+        # hold live (recent) tokens — the positional skip no longer applies
+        run |= q_pos >= skv
 
         @ctx.cell_when(run)
         def _step():
-            k_pos = ki * bkv + lax.iota(jnp.int32, bkv)
+            sp = sp_ref[0]                   # (bkv,) absolute slot positions
             q = q_ref[0, 0].astype(jnp.float32)          # (1, d)
             k = k_ref[0, 0].astype(jnp.float32)          # (bkv, d)
             s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * sm_scale
-            mask = (k_pos <= q_pos)[None, :]             # (1, bkv)
+            mask = ((sp >= 0) & (sp <= q_pos))[None, :]  # (1, bkv)
             if window is not None:
-                mask &= ((q_pos - k_pos) < window)[None, :]
+                mask &= ((q_pos - sp) < window)[None, :]
             s = jnp.where(mask, s, _NEG_INF)
             m_prev = m_scr[:, :1]
             l_prev = l_scr[:, :1]
@@ -427,6 +444,8 @@ def flash_decode_builder(D):
             Tile("v", (b, hk, skv, dv), dtype, block=(1, 1, bkv, dv),
                  index=lambda b_, h_, ki: (b_, h_ // g, ki, 0)),
             Tile("kv_len", (1, 1), jnp.int32),     # whole-array (dynamic len)
+            Tile("slot_pos", (1, skv), jnp.int32,  # slot -> absolute position
+                 block=(1, bkv), index=lambda b_, h_, ki: (0, ki)),
         ],
         outputs=[
             Tile("o", (b, h, 1, dv), dtype, block=(1, 1, 1, dv),

@@ -8,9 +8,11 @@ front-end's VJP declaration. No O(S^2) residuals are saved — only
 (q, k, v, o, lse); the backward recomputes p blockwise from the lse stats.
 
 ``flash_decode`` is a second declaration for single-token serving: the same
-online-softmax kernel specialized to one query row, with a dynamic ``kv_len``
-input masking the unfilled tail of the cache (no grad needed at serving
-time). ``decode_attention`` is its thin public wrapper.
+online-softmax kernel specialized to one query row, with TWO dynamic inputs
+— ``kv_len`` masking the unfilled tail of the cache and ``slot_pos`` mapping
+each cache slot to its absolute position, so rotated rolling-window caches
+run the same kernel (no grad needed at serving time). ``decode_attention``
+is its thin public wrapper.
 """
 
 from __future__ import annotations
@@ -129,16 +131,25 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=None, sm_scale=None,
 # ---------------------------------------------------------------------------
 
 def _decode_pre(args, params):
+    # read-only on params (.get, never .pop): pre hooks must not eat keys
+    # from a dict a caller may reuse across calls
     q, k, v = args
-    kv_len = params.pop("kv_len", None)
+    skv = k.shape[2]
+    kv_len = params.get("kv_len")
     if kv_len is None:
-        kv_len = k.shape[2]                  # full cache valid
+        kv_len = skv                         # full cache valid
     kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1, 1)
-    return q, k, v, kv_len
+    slot_pos = params.get("slot_pos")
+    if slot_pos is None:
+        # positional default — slot i holds absolute position i — so callers
+        # without rotated caches are untouched (the old iota mask, exactly)
+        slot_pos = jnp.arange(skv, dtype=jnp.int32)
+    slot_pos = jnp.asarray(slot_pos, jnp.int32).reshape(1, skv)
+    return q, k, v, kv_len, slot_pos
 
 
 def _decode_defines(args, params):
-    q, k, v, kv_len = args
+    q, k, v, kv_len, slot_pos = args
     b, h, one, d = q.shape
     if one != 1:
         raise ValueError(f"flash_decode: expected a single query token, "
@@ -151,6 +162,9 @@ def _decode_defines(args, params):
     if q.dtype != k.dtype or q.dtype != v.dtype:
         raise ValueError(f"flash_decode: dtypes disagree "
                          f"({q.dtype}/{k.dtype}/{v.dtype})")
+    if tuple(slot_pos.shape) != (1, skv):
+        raise ValueError(f"flash_decode: slot_pos shape {slot_pos.shape} "
+                         f"does not match the cache length ({skv} slots)")
     want = params["block_kv"]
     bkv = fit_block(want, skv)
     ncells = b * h * (skv // bkv)
@@ -172,10 +186,14 @@ def _decode_defines(args, params):
 def _decode_tune_ref(args, params):
     import numpy as np
 
-    q, k, v, kv_len = args
+    # slot_pos-aware oracle: the tune validation scores rotated caches the
+    # same way the kernel does (a truncating positional oracle would declare
+    # every windowed candidate wrong)
+    q, k, v, kv_len, slot_pos = args
     n = int(np.asarray(kv_len).reshape(-1)[0])
-    return decode_ref(q, k[:, :, :n], v[:, :, :n], window=params["window"],
-                      sm_scale=params["sm_scale"])
+    return decode_ref(q, k, v, window=params["window"],
+                      sm_scale=params["sm_scale"], kv_len=n,
+                      slot_pos=jnp.asarray(slot_pos).reshape(-1))
 
 
 def _decode_example(rng):
@@ -192,7 +210,7 @@ flash_decode = define_op(
     derive_defines=_decode_defines,
     pre=_decode_pre,
     defaults=dict(window=None, sm_scale=None, block_kv=512),
-    array_params=("kv_len",),               # dynamic valid cache length
+    array_params=("kv_len", "slot_pos"),    # dynamic length + slot positions
     ref_params=("window", "sm_scale"),
     tune_ref=_decode_tune_ref,
     sweep=dict(block_kv=[128, 256, 512, 1024]),
@@ -200,18 +218,22 @@ flash_decode = define_op(
     doc="""Single-token decode attention: q (B,H,1,D) against a kv cache
     (B,Hk,S,D). ``kv_len`` (int or traced scalar) masks the unfilled tail of
     the cache — the query sits at position kv_len-1 — so one compiled kernel
-    serves every step of an incremental-decode loop.""",
+    serves every step of an incremental-decode loop. ``slot_pos`` ((S,) i32,
+    -1 = empty) gives each cache slot's absolute position for ROTATED
+    rolling-window caches (slot = pos % W); omitted, slots are positional.""",
 )
 
 
 def decode_attention(q, k, v, *, window=None, sm_scale=None, block_kv=None,
-                     kv_len=None, backend="auto", interpret=None):
+                     kv_len=None, slot_pos=None, backend="auto",
+                     interpret=None):
     """Single-token decode attention (no grad needed at serving time).
 
     ``block_kv=None`` (the default) defers to the op's current default —
     which serving warmup may have replaced with a persisted tune winner; an
-    explicit value always wins."""
+    explicit value always wins. ``slot_pos`` routes rotated rolling-window
+    caches through the SAME kernel (see ``flash_decode``)."""
     kw = {} if block_kv is None else {"block_kv": block_kv}
     return flash_decode(q, k, v, window=window, sm_scale=sm_scale,
-                        kv_len=kv_len, backend=backend, interpret=interpret,
-                        **kw)
+                        kv_len=kv_len, slot_pos=slot_pos, backend=backend,
+                        interpret=interpret, **kw)

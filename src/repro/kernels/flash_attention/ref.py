@@ -105,6 +105,40 @@ def mha_chunked(q, k, v, *, causal=True, window=None, sm_scale=None,
     return out.reshape(b, h, sq, dv).astype(q.dtype)
 
 
-def decode_ref(q, k, v, *, window=None, sm_scale=None):
-    """Single-token decode: q (B, H, 1, D) against the full cache (B, Hk, S, D)."""
-    return mha_ref(q, k, v, causal=True, window=window, sm_scale=sm_scale)
+def decode_ref(q, k, v, *, window=None, sm_scale=None, kv_len=None,
+               slot_pos=None):
+    """Single-token decode oracle: q (B, H, 1, D) vs a cache (B, Hk, S, D).
+
+    Positional caches (slot i holds position i): ``kv_len`` (a concrete int)
+    truncates to the valid prefix; masking is mha_ref's causal/window mask.
+    ROTATED rolling-window caches: pass ``slot_pos`` ((S,) i32 — each slot's
+    absolute position, -1 for never-written) plus ``kv_len``; masking is then
+    slot_pos-driven, scoring the same function as the unified ``flash_decode``
+    kernel. This is the oracle the windowed autotune validates against."""
+    if slot_pos is None:
+        if kv_len is not None:
+            k, v = k[:, :, :kv_len], v[:, :, :kv_len]
+        return mha_ref(q, k, v, causal=True, window=window, sm_scale=sm_scale)
+    b, h, _, d = q.shape
+    hk, m = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // hk
+    if sm_scale is None:
+        sm_scale = 1.0 / d ** 0.5
+    sp = jnp.asarray(slot_pos, jnp.int32).reshape(-1)
+    q_pos = (sp.max() if kv_len is None
+             else jnp.asarray(kv_len, jnp.int32).reshape(()) - 1)
+    mask = (sp >= 0) & (sp <= q_pos)
+    if window is not None:
+        mask &= (q_pos - sp) < window
+    qg = q.reshape(b, hk, g, d)
+    s = jnp.einsum("bkgd,bkmd->bkgm", qg, k,
+                   preferred_element_type=jnp.float32) * sm_scale
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    denom = p.sum(-1, keepdims=True)
+    p = p / jnp.where(denom == 0, 1.0, denom)
+    o = jnp.einsum("bkgm,bkmd->bkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, 1, dv).astype(q.dtype)

@@ -17,10 +17,12 @@ __all__ = ["ssm_scan", "ssm_scan_pallas"]
 
 
 def _pre(args, params):
+    # read-only on params (.get, never .pop): pre hooks must not eat keys
+    # from a dict a caller may reuse across calls
     x, delta, A, B, C, D = args
     bt, L, dm = x.shape
     n = A.shape[1]
-    h0 = params.pop("h0", None)
+    h0 = params.get("h0")
     if h0 is None:
         h0 = jnp.zeros((bt, dm, n), jnp.float32)
     return x, delta, A, B, C, D.reshape(1, dm), h0

@@ -57,14 +57,14 @@ def apply_tuned_winners(cfg, batch: int, prompt_len: int, max_len: int):
              probe((batch, hk, prompt_len, hd), dtype)),
             dict(causal=True, window=window)),
     }
-    if window is None:
-        # windowed archs decode on the einsum path (rotated cache slots) —
-        # adopting a decode winner there would mutate the op for nothing
-        probes["flash_decode"] = (
-            (probe((batch, h, 1, hd), dtype),
-             probe((batch, hk, m, hd), dtype),
-             probe((batch, hk, m, hd), dtype)),
-            dict(window=None))
+    # windowed archs probe too: rolling-window decode runs the unified
+    # kernel (slot_pos input tile), so its tuned block_kv matters as much
+    # as the dense-cache one — the cache holds m = min(max_len, window)
+    probes["flash_decode"] = (
+        (probe((batch, h, 1, hd), dtype),
+         probe((batch, hk, m, hd), dtype),
+         probe((batch, hk, m, hd), dtype)),
+        dict(window=window))
     applied = {}
     for name, (args, params) in probes.items():
         op = registered_ops().get(name)
@@ -82,11 +82,21 @@ def apply_tuned_winners(cfg, batch: int, prompt_len: int, max_len: int):
 
 def generate(model: LM, params, prompts: np.ndarray, *, gen_tokens: int,
              mesh=None, eos_id: int | None = None, greedy: bool = True,
-             rng=None):
-    """prompts: (B, P) int32 -> (B, gen_tokens) int32 + stats."""
+             rng=None, max_len: int | None = None):
+    """prompts: (B, P) int32 -> (B, gen_tokens) int32 + stats.
+
+    ``max_len`` sizes the kv caches (default: exactly prompt + generation).
+    Overflowing a positional cache is an explicit host-side error here —
+    the decode steps run jitted, where the layer-level write would silently
+    clobber the last slot and attend corrupted history."""
     cfg = model.cfg
     b, plen = prompts.shape
-    max_len = plen + gen_tokens
+    max_len = max_len or (plen + gen_tokens)
+    if model.has_positional_cache and plen + gen_tokens > max_len:
+        raise ValueError(
+            f"kv cache overflow: prompt_len {plen} + gen_tokens {gen_tokens} "
+            f"= {plen + gen_tokens} tokens but max_len={max_len}; raise "
+            "max_len (rolling-window archs are exempt — their caches rotate)")
     mesh = mesh or make_local_mesh(model=1)
 
     # adopt persisted autotune winners BEFORE the steps trace: the traced

@@ -5,8 +5,9 @@ The perf-critical realization is selected at run time via
 ``use_kernel_backend``: "pallas" -> repro.kernels flash kernels, "jnp" ->
 oracle paths (mha_ref for short, mha_chunked for long sequences). Decode
 under "pallas" runs the registered ``flash_decode`` op against the
-preallocated cache (dynamic ``kv_len`` masks the unfilled tail); the "jnp"
-path and rolling-window caches use masked grouped einsums.
+preallocated cache for EVERY layout — dynamic ``kv_len`` masks the unfilled
+tail, and rolling-window caches pass their rotated-slot position map as the
+``slot_pos`` input tile; only the "jnp" path uses masked grouped einsums.
 """
 
 from __future__ import annotations
@@ -14,8 +15,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention import (decode_attention, flash_attention,
-                                           mha_chunked, mha_ref)
+from repro.kernels.flash_attention import (decode_attention, decode_ref,
+                                           flash_attention, mha_chunked,
+                                           mha_ref)
 from repro.parallel.context import shard_activation
 
 from .common import dense_init, kernel_backend, rmsnorm
@@ -122,24 +124,6 @@ def gqa_prefill_cache(cache, k, v, cfg):
     return cache
 
 
-def _masked_decode_attn(q, k, v, mask, sm_scale):
-    """q (B,H,1,hd), k/v (B,Hk,M,hd), mask (M,) bool. Grouped einsum (no kv
-    replication in HBM — decode is memory-bound, this is the point). The
-    cache is consumed in its storage dtype with f32 MXU accumulation —
-    materializing an f32 copy of a 32k cache would double decode traffic."""
-    b, h, _, hd = q.shape
-    hk = k.shape[1]
-    g = h // hk
-    qg = q.reshape(b, hk, g, hd)
-    s = jnp.einsum("bkgd,bkmd->bkgm", qg, k,
-                   preferred_element_type=jnp.float32) * sm_scale
-    s = jnp.where(mask[None, None, None], s, -jnp.inf)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgm,bkmd->bkgd", p.astype(v.dtype), v,
-                   preferred_element_type=jnp.float32)
-    return o.reshape(b, h, 1, hd).astype(q.dtype)
-
-
 def gqa_decode(params, x, cache, cfg):
     """One-token decode. x: (B, 1, d_model). Returns (y, new_cache)."""
     b = x.shape[0]
@@ -158,24 +142,36 @@ def gqa_decode(params, x, cache, cfg):
         cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v1, (0, 0, slot, 0))
         cache["slot_pos"] = jax.lax.dynamic_update_slice(
             cache["slot_pos"], pos[None], (slot,))
-        mask = (cache["slot_pos"] >= 0) & (cache["slot_pos"] <= pos)
+        kv_len = pos + 1
     else:
-        write = jnp.minimum(pos, m - 1)     # clamp (cache sized for max_len)
+        # clamp so the traced write stays in bounds; decoding PAST the cache
+        # is rejected host-side (LM.decode_step / launch.serve.generate)
+        write = jnp.minimum(pos, m - 1)
         cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k1, (0, 0, write, 0))
         cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v1, (0, 0, write, 0))
-        mask = jnp.arange(m) <= write
+        kv_len = write + 1
     cache["pos"] = pos + 1
 
-    if kernel_backend() == "pallas" and not cfg.window:
-        # the registered flash_decode op: one compiled kernel for the whole
-        # decode loop, the growing valid length passed as a traced kv_len.
-        # Rolling-window caches store ROTATED slots (slot = pos % W) — their
-        # data-dependent mask has no positional form, so they stay on the
-        # grouped-einsum path.
-        o = decode_attention(q, cache["k"], cache["v"], kv_len=write + 1,
-                             sm_scale=hd ** -0.5)
+    if kernel_backend() == "pallas":
+        # the registered flash_decode op on EVERY cache layout: one compiled
+        # kernel for the whole decode loop, the growing valid length passed
+        # as a traced kv_len. Rolling-window caches store ROTATED slots
+        # (slot = pos % W); their data-dependent mask rides in as the
+        # slot_pos input tile — the grouped-einsum fallback is gone.
+        o = decode_attention(
+            q, cache["k"], cache["v"], kv_len=kv_len,
+            window=cfg.window if cfg.window else None,
+            slot_pos=cache["slot_pos"] if cfg.window else None,
+            sm_scale=hd ** -0.5)
     else:
-        o = _masked_decode_attn(q, cache["k"], cache["v"], mask, hd ** -0.5)
+        # the slot_pos-aware oracle covers BOTH layouts with one grouped
+        # masked einsum (no kv replication in HBM; the cache is consumed in
+        # its storage dtype) — positional caches pass the identity map
+        o = decode_ref(q, cache["k"], cache["v"], kv_len=kv_len,
+                       window=cfg.window if cfg.window else None,
+                       slot_pos=(cache["slot_pos"] if cfg.window
+                                 else jnp.arange(m)),
+                       sm_scale=hd ** -0.5)
     y = o.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ params["wo"]
     return y, cache
 

@@ -289,12 +289,43 @@ class LM:
                 "stacks": [self._stack_cache_init(s, batch, max_len, dtype)
                            for s in self.program]}
 
+    @property
+    def has_positional_cache(self) -> bool:
+        """True when decode positions are bounded by the cache's max_len:
+        attention stacks WITHOUT a rolling window (rolling caches rotate and
+        never overflow; SSM stacks carry O(1) state)."""
+        return (not self.cfg.window and
+                any(s.kind in ("dense", "moe", "zamba_group")
+                    for s in self.program))
+
+    def cache_capacity(self, cache) -> int | None:
+        """Token positions the attention caches can hold, or None when
+        unbounded (rolling-window or attention-free programs)."""
+        if not self.has_positional_cache:
+            return None
+        caps = []
+        for spec, sc in zip(self.program, cache["stacks"]):
+            if spec.kind in ("dense", "moe"):
+                c = sc
+            elif spec.kind == "zamba_group":
+                c = sc["attn"]
+            else:
+                continue
+            # stacked leaves: ckv (n, B, max_len, lora) / k (n, B, Hk, m, hd)
+            caps.append(c["ckv"].shape[2] if "ckv" in c else c["k"].shape[3])
+        return min(caps) if caps else None
+
     # -------------------------------------------------------------- prefill
     def prefill(self, params, tokens, prefix_embeddings=None, max_len=None):
         """Returns (last-token logits (B, Vpad), cache)."""
         cfg = self.cfg
         x = self._embed(params, tokens, prefix_embeddings)
         max_len = max_len or x.shape[1]
+        if self.has_positional_cache and x.shape[1] > max_len:
+            raise ValueError(
+                f"kv cache overflow: prefilling {x.shape[1]} tokens into a "
+                f"cache of max_len={max_len}; decode would silently attend "
+                "truncated history — raise max_len")
         prefix_len = (prefix_embeddings.shape[1]
                       if (prefix_embeddings is not None and cfg.prefix_lm) else 0)
         caches = []
@@ -340,7 +371,19 @@ class LM:
         """One token for every sequence. tokens: (B, 1). Returns
         (logits (B, Vpad), new_cache)."""
         cfg = self.cfg
-        x = self._embed(params, tokens, pos0=cache.get("pos", 0))
+        pos = cache.get("pos", 0)
+        # cache overflow is an ERROR, not a silent clobber of the last slot:
+        # checked here when pos is concrete (eager decode loops); jitted
+        # loops are guarded host-side by launch.serve.generate
+        cap = self.cache_capacity(cache) if "stacks" in cache else None
+        if (cap is not None and not isinstance(pos, jax.core.Tracer)
+                and int(pos) >= cap):
+            raise ValueError(
+                f"kv cache overflow: decode at position {int(pos)} but the "
+                f"cache holds {cap} tokens; grow max_len at prefill/"
+                "init_cache (the layer-level write would silently overwrite "
+                "the last slot and attend corrupted history)")
+        x = self._embed(params, tokens, pos0=pos)
         new_caches = []
         for spec, sp, sc in zip(self.program, params["stacks"], cache["stacks"]):
             if spec.kind == "zamba_group":
@@ -375,7 +418,7 @@ class LM:
             new_caches.append(nc)
         x = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
         logits = self._logits(params, x)[:, 0]
-        return logits, {"pos": cache.get("pos", 0) + 1, "stacks": new_caches}
+        return logits, {"pos": pos + 1, "stacks": new_caches}
 
     def greedy_token(self, logits):
         return jnp.argmax(logits[..., :self.cfg.vocab_size], axis=-1)

@@ -1,0 +1,311 @@
+"""Rolling-window decode through the unified kernel (the last backend-
+conditional attention path is gone).
+
+``flash_decode`` takes a ``slot_pos`` input tile — each cache slot's absolute
+position — and masks data-dependently, so ``gqa_decode`` with ``cfg.window``
+runs the SAME kernel on the pallas path instead of falling back to a masked
+grouped einsum. Covers: kernel vs masked-einsum vs full-history oracle across
+wrap boundaries on all three backends (property-tested), window smaller than
+a kv block, non-dividing cache lengths, GQA/MQA grouping, a jitted multi-step
+decode loop reusing ONE compiled kernel, the layer path with the einsum
+fallback hard-disabled, pre-hooks that must not eat a shared kwargs dict,
+cache-overflow guards (prefill / eager decode_step / generate), and the
+serving warmup probing windowed decode shapes.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import BACKENDS, default_device
+from repro.kernels.flash_attention import (decode_attention, decode_ref,
+                                           flash_decode, mha_ref)
+from repro.layers import attention as A
+from repro.layers.common import use_kernel_backend
+from repro.models import LM
+
+from tests._hypothesis_compat import given, settings, strategies as st
+
+import repro.kernels  # noqa: F401 — registers the op families
+
+
+def _rolling(k_full, v_full, m):
+    """Scatter a (b, hk, t, d) history into a rotated m-slot cache.
+
+    Returns (k_cache, v_cache, slot_pos) with slot = pos % m — exactly the
+    layout gqa_prefill_cache/gqa_decode maintain for cfg.window caches."""
+    b, hk, t, d = k_full.shape
+    kc = np.zeros((b, hk, m, k_full.shape[3]), k_full.dtype)
+    vc = np.zeros((b, hk, m, v_full.shape[3]), v_full.dtype)
+    sp = np.full((m,), -1, np.int32)
+    for p in range(t):
+        s = p % m
+        kc[:, :, s] = k_full[:, :, p]
+        vc[:, :, s] = v_full[:, :, p]
+        sp[s] = p
+    return jnp.asarray(kc), jnp.asarray(vc), jnp.asarray(sp)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs masked einsum vs full-history oracle, all three expansions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@settings(max_examples=6, deadline=None)
+@given(m=st.integers(min_value=6, max_value=20),
+       dt=st.integers(min_value=-5, max_value=30),
+       heads=st.sampled_from([(2, 2), (4, 2), (4, 1)]),  # MHA / GQA / MQA
+       bkv=st.integers(min_value=3, max_value=16))
+def test_rotated_decode_matches_history_and_einsum(backend, m, dt, heads, bkv):
+    """Across the wrap boundary (t < W, t == W, t >> W), non-dividing cache
+    lengths (fit_block clamps bkv to a divisor of m) and head-group counts,
+    the kernel == the slot_pos masked einsum == windowed attention over the
+    FULL history."""
+    h, hk = heads
+    b, d = 1, 8
+    t = max(1, m + dt)                     # query decodes token t-1
+    rng = np.random.RandomState(m * 101 + t * 7 + h)
+    k_full = rng.randn(b, hk, t, d).astype(np.float32)
+    v_full = rng.randn(b, hk, t, d).astype(np.float32)
+    q = jnp.asarray(rng.randn(b, h, 1, d), jnp.float32)
+    kc, vc, sp = _rolling(k_full, v_full, m)
+
+    # oracle 1: windowed causal attention over the full, un-rotated history
+    want = mha_ref(q, jnp.asarray(k_full), jnp.asarray(v_full), causal=True,
+                   window=m)
+    # oracle 2: the slot_pos masked grouped einsum (decode_ref rotated path)
+    ein = decode_ref(q, kc, vc, window=m, kv_len=t, slot_pos=sp)
+    np.testing.assert_allclose(np.asarray(ein), np.asarray(want),
+                               rtol=2e-4, atol=2e-4,
+                               err_msg=f"decode_ref diverged (m={m}, t={t})")
+    got = decode_attention(q, kc, vc, window=m, kv_len=t, slot_pos=sp,
+                           block_kv=bkv, backend=backend)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4,
+                               err_msg=f"kernel diverged (m={m}, t={t}, "
+                                       f"bkv={bkv}, {backend})")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_rotated_decode_window_smaller_than_kv_block(backend):
+    """window < block_kv: stale slots inside a live block must be masked by
+    the slot_pos window term, not a block-level skip."""
+    b, h, m, d, W = 1, 2, 16, 8, 5        # cache of 16 slots, window 5
+    t = 27                                 # wrapped
+    rng = np.random.RandomState(9)
+    k_full = rng.randn(b, h, t, d).astype(np.float32)
+    v_full = rng.randn(b, h, t, d).astype(np.float32)
+    q = jnp.asarray(rng.randn(b, h, 1, d), jnp.float32)
+    kc, vc, sp = _rolling(k_full, v_full, m)
+    want = mha_ref(q, jnp.asarray(k_full), jnp.asarray(v_full), causal=True,
+                   window=W)
+    got = decode_attention(q, kc, vc, window=W, kv_len=t, slot_pos=sp,
+                           block_kv=16, backend=backend)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_windowed_decode_loop_reuses_one_compiled_kernel():
+    """A jitted decode step with traced kv_len + slot_pos builds the kernel
+    ONCE and stays correct across the wrap boundary."""
+    b, h, m, d = 1, 2, 8, 8
+    rng = np.random.RandomState(11)
+    t_max = 3 * m
+    k_full = rng.randn(b, h, t_max, d).astype(np.float32)
+    v_full = rng.randn(b, h, t_max, d).astype(np.float32)
+    q = jnp.asarray(rng.randn(b, h, 1, d), jnp.float32)
+
+    @jax.jit
+    def step(kc, vc, sp, n):
+        return decode_attention(q, kc, vc, window=m, kv_len=n, slot_pos=sp,
+                                block_kv=4, backend="jnp")
+
+    dev = default_device("jnp", None)
+    builds0 = dev.stats.builds
+    for t in (1, m - 1, m, m + 1, 2 * m, t_max):
+        kc, vc, sp = _rolling(k_full[:, :, :t], v_full[:, :, :t], m)
+        got = step(kc, vc, sp, jnp.int32(t))
+        want = mha_ref(q, jnp.asarray(k_full[:, :, :t]),
+                       jnp.asarray(v_full[:, :, :t]), causal=True, window=m)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4, err_msg=f"t={t}")
+    assert dev.stats.builds - builds0 == 1, \
+        "the growing/wrapping cache must not retrace or rebuild the kernel"
+
+
+# ---------------------------------------------------------------------------
+# layer path: gqa_decode with cfg.window runs the kernel, not the einsum
+# ---------------------------------------------------------------------------
+
+def _windowed_cfg(window=8):
+    return dataclasses.replace(reduced(get_config("llama3_2_1b")),
+                               window=window)
+
+
+def test_gqa_decode_windowed_pallas_matches_jnp_across_wrap():
+    cfg = _windowed_cfg(window=8)
+    params = A.gqa_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, 6
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model))
+    outs = {}
+    for be in ("jnp", "pallas"):
+        with use_kernel_backend(be):
+            _, (k, v) = A.gqa_forward(params, x, cfg, return_kv=True)
+            cache = A.gqa_prefill_cache(
+                A.gqa_cache_init(cfg, b, 32, jnp.float32), k, v, cfg)
+            ys, xt = [], x[:, -1:]
+            for _ in range(8):              # crosses the W=8 wrap
+                yt, cache = A.gqa_decode(params, xt, cache, cfg)
+                ys.append(yt)
+            outs[be] = np.asarray(jnp.concatenate(ys, 1))
+    np.testing.assert_allclose(outs["pallas"], outs["jnp"],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gqa_decode_windowed_issues_no_einsum_on_pallas(monkeypatch):
+    """The acceptance criterion made executable: with cfg.window set and the
+    pallas backend, the grouped-einsum fallback must never run."""
+    cfg = _windowed_cfg(window=8)
+    params = A.gqa_init(jax.random.PRNGKey(2), cfg, jnp.float32)
+    b = 2
+    x = jax.random.normal(jax.random.PRNGKey(3), (b, 4, cfg.d_model))
+
+    def boom(*a, **kw):
+        raise AssertionError("grouped-einsum fallback ran on the pallas path")
+
+    monkeypatch.setattr(A, "decode_ref", boom)   # the layer's einsum branch
+    with use_kernel_backend("pallas"):
+        _, (k, v) = A.gqa_forward(params, x, cfg, return_kv=True)
+        cache = A.gqa_prefill_cache(
+            A.gqa_cache_init(cfg, b, 16, jnp.float32), k, v, cfg)
+        xt = x[:, -1:]
+        for _ in range(6):                  # through the wrap, einsum-free
+            yt, cache = A.gqa_decode(params, xt, cache, cfg)
+    assert np.isfinite(np.asarray(yt)).all()
+
+
+# ---------------------------------------------------------------------------
+# pre hooks must not eat keys from a shared kwargs/params dict
+# ---------------------------------------------------------------------------
+
+def test_decode_pre_does_not_mutate_shared_params():
+    from repro.kernels.flash_attention.ops import _decode_pre
+
+    rng = np.random.RandomState(13)
+    q = jnp.asarray(rng.randn(1, 2, 1, 8), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 16, 8), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, 16, 8), jnp.float32)
+
+    params = dict(flash_decode.defaults, kv_len=5, slot_pos=None)
+    _decode_pre((q, k, v), params)
+    _decode_pre((q, k, v), params)          # second call sees the SAME dict
+    assert params["kv_len"] == 5, "pre hook ate kv_len from a reused dict"
+
+    # end-to-end: one kwargs dict, two calls, identical results
+    kw = dict(kv_len=5, block_kv=8, backend="jnp")
+    o1 = decode_attention(q, k, v, **kw)
+    o2 = decode_attention(q, k, v, **kw)
+    assert kw == dict(kv_len=5, block_kv=8, backend="jnp")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
+    want = decode_ref(q, k, v, kv_len=5)
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_pre_does_not_mutate_shared_params():
+    from repro.kernels.ssm_scan.ops import _pre as ssm_pre
+
+    rng = np.random.RandomState(14)
+    bt, L, dm, n = 1, 8, 4, 2
+    args = (jnp.asarray(rng.randn(bt, L, dm), jnp.float32),
+            jnp.asarray(np.abs(rng.randn(bt, L, dm)) * 0.1, jnp.float32),
+            -jnp.asarray(np.abs(rng.randn(dm, n)) + 0.1, jnp.float32),
+            jnp.asarray(rng.randn(bt, L, n), jnp.float32),
+            jnp.asarray(rng.randn(bt, L, n), jnp.float32),
+            jnp.asarray(rng.randn(dm), jnp.float32))
+    h0 = jnp.ones((bt, dm, n), jnp.float32)
+    params = {"h0": h0}
+    ssm_pre(args, params)
+    assert params.get("h0") is h0, "ssm pre hook ate h0 from a reused dict"
+
+
+# ---------------------------------------------------------------------------
+# cache overflow is an explicit error, not a silent slot-(m-1) overwrite
+# ---------------------------------------------------------------------------
+
+def _tiny_lm():
+    cfg = reduced(get_config("llama3_2_1b"))
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(5))
+    return cfg, model, params
+
+
+def test_prefill_longer_than_max_len_raises():
+    cfg, model, params = _tiny_lm()
+    tokens = jnp.asarray(np.random.RandomState(6).randint(
+        0, cfg.vocab_size, (1, 8)))
+    with pytest.raises(ValueError, match="cache overflow"):
+        model.prefill(params, tokens, max_len=4)
+
+
+def test_decode_past_capacity_raises_eagerly():
+    cfg, model, params = _tiny_lm()
+    rng = np.random.RandomState(7)
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab_size, (1, 4)))
+    _, cache = model.prefill(params, tokens, max_len=5)
+    assert model.cache_capacity(cache) == 5
+    tok = jnp.asarray(rng.randint(0, cfg.vocab_size, (1, 1)))
+    _, cache = model.decode_step(params, tok, cache)      # pos 4 -> 5: fits
+    with pytest.raises(ValueError, match="cache overflow"):
+        model.decode_step(params, tok, cache)             # pos 5 >= cap 5
+
+    # rolling-window archs are exempt: the cache rotates, never overflows
+    wcfg = _windowed_cfg(window=4)
+    wmodel = LM(wcfg)
+    wparams = wmodel.init(jax.random.PRNGKey(8))
+    _, wcache = wmodel.prefill(wparams, tokens, max_len=5)
+    assert wmodel.cache_capacity(wcache) is None
+    for _ in range(4):                      # decode well past max_len
+        _, wcache = wmodel.decode_step(wparams, tok, wcache)
+
+
+def test_generate_overflow_guard():
+    from repro.launch.serve import generate
+
+    cfg, model, params = _tiny_lm()
+    prompts = np.random.RandomState(9).randint(
+        0, cfg.vocab_size, (1, 4)).astype(np.int32)
+    with pytest.raises(ValueError, match="cache overflow"):
+        generate(model, params, prompts, gen_tokens=4, max_len=6)
+
+
+# ---------------------------------------------------------------------------
+# serving warmup probes windowed decode shapes
+# ---------------------------------------------------------------------------
+
+def test_warmup_adopts_windowed_decode_winner(tmp_path, monkeypatch):
+    from repro.launch.serve import apply_tuned_winners
+
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    cfg = _windowed_cfg(window=128)         # the declared sweep's smallest
+    h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    b, plen, max_len = 2, 16, 256
+    m = min(max_len, cfg.window)            # the serving cache length
+    assert apply_tuned_winners(cfg, b, plen, max_len) == {}  # cold cache
+
+    rng = np.random.RandomState(10)
+    q = jnp.asarray(rng.randn(b, h, 1, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(b, hk, m, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(b, hk, m, hd), jnp.float32)
+    old_default = flash_decode.defaults["block_kv"]
+    try:
+        r = flash_decode.tune((q, k, v), window=cfg.window, repeats=1)
+        adopted = apply_tuned_winners(cfg, b, plen, max_len)
+        assert adopted["flash_decode"]["block_kv"] == r["block_kv"]
+        assert flash_decode.defaults["block_kv"] == r["block_kv"]
+    finally:
+        flash_decode.defaults["block_kv"] = old_default
