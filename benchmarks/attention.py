@@ -13,7 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention import decode_attention, flash_attention
-from repro.kernels.flash_attention.ref import decode_ref, mha_chunked, mha_ref
+from repro.kernels.flash_attention.ref import (decode_ref, mha_chunked,
+                                               mha_ref, rolling_slot_pos)
 from repro.kernels.ssm_scan.ref import selective_scan_assoc
 from repro.layers.mamba import ssd_chunked
 from .common import Row, SMOKE_TIME, time_fn
@@ -74,10 +75,7 @@ def run(rows: list, smoke: bool = False):
     # unified kernel with the slot_pos input tile
     W = 64 if smoke else 1024
     t = W + W // 2                           # wrapped: every slot live
-    sp = np.full((W,), -1, np.int32)
-    for p in range(t - W, t):
-        sp[p % W] = p
-    sp = jnp.asarray(sp)
+    sp = jnp.asarray(rolling_slot_pos(W, t))
     kw_, vw_ = k[:, :, :W], v[:, :, :W]
     wflops = 4 * b * h * W * d
     sec = time_fn(jax.jit(lambda q_, k_, v_: decode_ref(

@@ -6,7 +6,8 @@ import time
 
 import jax
 
-__all__ = ["time_fn", "Row", "emit", "SMOKE_TIME"]
+__all__ = ["time_fn", "Row", "emit", "write_json", "check_manifest",
+           "SMOKE_TIME"]
 
 
 SMOKE_TIME = dict(warmup=1, repeats=1)  # one rep: correctness-drift canary
@@ -43,3 +44,32 @@ def emit(rows):
     print("name,us_per_call,derived")
     for r in rows:
         print(r.csv())
+
+
+def write_json(rows, path: str) -> None:
+    """Persist rows as JSON (the CI ``bench_smoke.json`` artifact)."""
+    import json
+    import os
+
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump([dict(name=r.name, us_per_call=r.seconds * 1e6,
+                        derived=r.derived) for r in rows], f, indent=1)
+
+
+def check_manifest(rows, manifest_path: str) -> list[str]:
+    """Row-manifest check: every non-comment line of ``manifest_path`` is a
+    row-name PREFIX that must match at least one emitted row. Returns the
+    list of unmatched prefixes — a benchmark family silently disappearing
+    (renamed, import-skipped, dropped from --smoke) breaks CI instead of
+    rotting."""
+    names = [r.name for r in rows]
+    missing = []
+    with open(manifest_path) as f:
+        for line in f:
+            want = line.split("#", 1)[0].strip()
+            if not want:
+                continue
+            if not any(n == want or n.startswith(want) for n in names):
+                missing.append(want)
+    return missing

@@ -9,7 +9,7 @@ the dry-run artifacts when present (full table via ``-m benchmarks.roofline``).
 from __future__ import annotations
 
 from . import attention, dg, fd, sem, unified
-from .common import Row, emit
+from .common import Row, check_manifest, emit, write_json
 
 
 def _roofline_rows(rows):
@@ -35,6 +35,13 @@ def main(argv=None) -> None:
                     help="tiny shapes, one rep per row: a fast CI canary that "
                          "every benchmark path still builds and runs "
                          "(timings are not meaningful)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also write the rows as JSON (the CI "
+                         "bench_smoke.json artifact)")
+    ap.add_argument("--check-manifest", default=None, metavar="PATH",
+                    help="fail (exit 1) unless every row-name prefix listed "
+                         "in PATH matched at least one emitted row — "
+                         "benchmark drift breaks CI instead of rotting")
     args = ap.parse_args(argv)
 
     rows = []
@@ -48,6 +55,20 @@ def main(argv=None) -> None:
     except Exception as e:  # artifacts may not exist yet
         rows.append(Row("roofline/unavailable", 0.0, str(e)[:60]))
     emit(rows)
+    if args.out:
+        write_json(rows, args.out)
+    if args.check_manifest:
+        import sys
+
+        missing = check_manifest(rows, args.check_manifest)
+        if missing:
+            print("benchmarks.run: expected rows MISSING from this run "
+                  f"(manifest {args.check_manifest}):", file=sys.stderr)
+            for m in missing:
+                print(f"  {m}", file=sys.stderr)
+            sys.exit(1)
+        print(f"benchmarks.run: manifest OK ({args.check_manifest})",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

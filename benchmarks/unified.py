@@ -1,8 +1,9 @@
-"""Unified-language kernel rows: matmul (reduce axis), rmsnorm and the full
+"""Unified-language kernel rows: matmul (reduce axis), rmsnorm, the full
 flash-attention family — forward, fused backward (per-output reduce
-granularity) and single-token decode — on all three backend expansions. The
-pallas-vs-oracle ratio is the paper's portability pitch made measurable: one
-source, per-backend performance."""
+granularity) and single-token decode — and the fused LM head (matmul +
+online-softmax row stats, outputs at multiple reduce granularities) on all
+three backend expansions. The pallas-vs-oracle ratio is the paper's
+portability pitch made measurable: one source, per-backend performance."""
 
 from __future__ import annotations
 
@@ -10,7 +11,9 @@ import jax
 import numpy as np
 
 from repro.core import BACKENDS
-from repro.kernels.flash_attention import decode_attention, flash_attention
+from repro.kernels.flash_attention import (decode_attention, flash_attention,
+                                           rolling_slot_pos)
+from repro.kernels.lm_head import lm_head_ce, lm_head_logits
 from repro.kernels.matmul import matmul
 from repro.kernels.rmsnorm import rmsnorm_unified
 
@@ -91,9 +94,7 @@ def run(rows, smoke: bool = False):
     # through the SAME kernel on every backend (was: einsum-only fallback)
     W = s2 // 2
     t = W + W // 2
-    sp = np.full((W,), -1, np.int32)
-    for p in range(t - W, t):
-        sp[p % W] = p
+    sp = rolling_slot_pos(W, t)
     wkk, wvv = kk[:, :, :W], vv[:, :, :W]
     wfl = 4 * b2 * h2 * W * d2
     wbkv = min(bq, W)
@@ -104,4 +105,30 @@ def run(rows, smoke: bool = False):
         rows.append(Row(f"unified/flash_decode_window/{backend}", sec,
                         f"W={W} bkv={wbkv} "
                         f"gflops={wfl / sec / 1e9:.1f}"))
+
+    # fused LM head — matmul + row-max/row-sum at DIFFERENT reduce
+    # granularities in one grid. lm_head_ce streams logsumexp + the gold
+    # logit out of the pass (the (R, V) logits never materialize);
+    # lm_head_logits adds the row max / greedy argmax to the logits pass.
+    r4, d4, v4 = (32, 64, 512) if smoke else (512, 512, 4096)
+    vocab4 = v4 - 64                       # exercise the Megatron pad mask
+    br4, bv4, bk4 = (16, 128, 32) if smoke else (128, 512, 128)
+    x4 = rng.randn(r4, d4).astype(np.float32)
+    w4 = rng.randn(d4, v4).astype(np.float32)
+    lab4 = rng.randint(0, vocab4, (r4, 1)).astype(np.int32)
+    hfl = 2 * r4 * d4 * v4
+    for backend in BACKENDS:
+        sec = time_fn(lambda x_, w_, l_, be=backend: lm_head_ce(
+            x_, w_, l_, vocab=vocab4, block_r=br4, block_v=bv4, block_k=bk4,
+            backend=be), x4, w4, lab4, **tkw)
+        rows.append(Row(f"unified/lm_head_ce/{backend}", sec,
+                        f"R={r4} d={d4} V={v4} "
+                        f"gflops={hfl / sec / 1e9:.1f}"))
+    for backend in BACKENDS:
+        sec = time_fn(lambda x_, w_, be=backend: lm_head_logits(
+            x_, w_, vocab=vocab4, block_r=br4, block_v=bv4, block_k=bk4,
+            backend=be), x4, w4, **tkw)
+        rows.append(Row(f"unified/lm_head_logits/{backend}", sec,
+                        f"R={r4} d={d4} V={v4} "
+                        f"gflops={hfl / sec / 1e9:.1f}"))
     return rows

@@ -115,16 +115,15 @@ def main():
     #    the predicate is computable from the dynamic scalars (here: while
     #    kv_len <= S the cache hasn't rotated, so past-the-query blocks
     #    never issue MXU work).
-    from repro.kernels.flash_attention import decode_attention, decode_ref
+    from repro.kernels.flash_attention import (decode_attention, decode_ref,
+                                               rolling_slot_pos)
 
     W = 16                                   # rolling cache of W slots
     t = 25                                   # decoded PAST the wrap (t > W)
     kc = rng.randn(1, 2, W, 32).astype(np.float32)
     vc = rng.randn(1, 2, W, 32).astype(np.float32)
     q1 = rng.randn(1, 2, 1, 32).astype(np.float32)
-    slot_pos = np.full((W,), -1, np.int32)
-    for p in range(t - W, t):
-        slot_pos[p % W] = p                  # slot -> absolute position
+    slot_pos = rolling_slot_pos(W, t)        # slot -> absolute position
     got = decode_attention(q1, kc, vc, window=W, kv_len=t, slot_pos=slot_pos,
                            backend="jnp")
     want = decode_ref(q1, kc, vc, window=W, kv_len=t, slot_pos=slot_pos)
@@ -132,6 +131,49 @@ def main():
                                rtol=1e-5, atol=1e-5)
     print(f"dynamic input tiles: rotated-cache decode OK "
           f"(wrap at {W}, step {t})")
+
+    # 9. MULTI-GRANULARITY outputs: one grid, outputs accumulated at
+    #    DIFFERENT levels of the sequential loop nest — Tile(reduce=<subset
+    #    of reduce_axes>). The fused LM head is the showcase: over grid
+    #    (rows, nv, nk) with reduce_axes=(1, 2) (vocab blocks outer-
+    #    sequential, d blocks inner) its outputs declare THREE granularities
+    #    across the op family:
+    #      logits  Tile(reduce=(2,))    one block per (row, vocab) cell,
+    #                                   accumulated over the d sweep only
+    #      m/arg/  Tile(reduce=(1, 2))  one block per row, accumulated over
+    #      lse/gold                     BOTH sweeps (online softmax in
+    #                                   scratch — running max, rescaled
+    #                                   sum-of-exp, gold-token gather)
+    #      dx/dw   Tile(reduce=(1,)) /  the backward's transposed pairing
+    #              Tile(reduce=(0,))    (dx over vocab blocks, dw over row
+    #                                   blocks, ONE grid — like flash bwd)
+    #    So logsumexp + the gold logit stream out of ONE matmul pass — the
+    #    (rows, vocab) logits never materialize in the CE path — and the
+    #    decode path gets the greedy argmax with its logits for free.
+    from repro.kernels.lm_head import lm_head_ce, lm_head_ce_ref, lm_head_logits
+
+    R, dm, V, vocab = 16, 32, 96, 70         # padded vocab: 26 masked columns
+    xh = rng.randn(R, dm).astype(np.float32)
+    wh = rng.randn(dm, V).astype(np.float32)
+    labels = rng.randint(0, vocab, (R, 1)).astype(np.int32)
+    nll_want = lm_head_ce_ref(xh, wh, labels, vocab=vocab)
+    for backend in BACKENDS:
+        nll = lm_head_ce(xh, wh, labels, vocab=vocab, block_r=8, block_v=16,
+                         block_k=16, backend=backend)
+        np.testing.assert_allclose(np.asarray(nll), np.asarray(nll_want),
+                                   rtol=1e-4, atol=1e-4)
+    # differentiable: the backward recomputes softmax - onehot blockwise
+    # from the saved row stats (no logits residual), on the same backend
+    dxh = jax.grad(lambda x_: lm_head_ce(
+        x_, wh, labels, vocab=vocab, block_r=8, block_v=16, block_k=16,
+        backend="jnp").sum())(xh)
+    # decode flavor: logits + row max + greedy argmax from the SAME pass
+    logits, m, arg = lm_head_logits.raw(xh, wh, vocab=vocab, block_r=8,
+                                        block_v=16, block_k=16, backend="jnp")
+    assert (np.asarray(arg)[:, 0] ==
+            np.asarray(logits)[:, :vocab].argmax(-1)).all()
+    print(f"multi-granularity lm_head: fused CE + greedy decode OK "
+          f"(|dx| = {float(jnp.abs(dxh).mean()):.3f})")
 
     print("one declaration -> every backend, tuned, differentiable, "
           "identical results")

@@ -1,34 +1,104 @@
 #!/usr/bin/env bash
-# Tier-1 verify: install dev deps (best effort — offline machines fall back
-# to tests/_hypothesis_compat.py) and run the canonical test command.
+# Staged CI pipeline. Stages (in order):
+#
+#   deps     install dev deps (best effort — offline machines fall back to
+#            tests/_hypothesis_compat.py), verify pytest is importable
+#   guards   kernel-library purity: no bespoke pallas_call under
+#            src/repro/kernels/ (word-boundary — aliasing `from ... import
+#            pallas_call` counts too) and no jax.experimental.pallas import
+#            outside src/repro/core/
+#   tests    the tier-1 suite (extra args after the stage selector are
+#            forwarded to pytest)
+#   matrix   backend matrix: the cross-backend agreement suites re-run under
+#            REPRO_BACKEND=jnp and REPRO_BACKEND=loops, so a regression in a
+#            non-default expansion can't hide behind "auto" = pallas
+#   bench    benchmark smoke (tiny shapes, one rep) writing
+#            artifacts/bench_smoke.json, then the row-manifest check — a
+#            benchmark row disappearing fails the build
+#
+# Usage:
+#   scripts/ci.sh                     # all stages
+#   scripts/ci.sh --stage guards      # one stage
+#   scripts/ci.sh --stage tests -k lm_head   # stage + pytest args
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-if ! python -c "import hypothesis, pytest" >/dev/null 2>&1; then
-    python -m pip install -e '.[dev]' \
-        || echo "ci.sh: pip install failed (offline?); running with the" \
-                "_hypothesis_compat fixed-example fallback"
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+STAGES="deps guards tests matrix bench"
+if [[ "${1:-}" == "--stage" ]]; then
+    [[ $# -ge 2 ]] || { echo "ci.sh: --stage needs a name (one of: $STAGES)" >&2; exit 2; }
+    STAGES="$2"
+    shift 2
 fi
 
-if ! python -c "import pytest" >/dev/null 2>&1; then
-    echo "ci.sh: pytest is not installed and could not be installed" >&2
-    echo "ci.sh: the _hypothesis_compat fallback only covers hypothesis" >&2
-    exit 1
-fi
+# The cross-backend agreement suites the matrix stage re-runs per backend.
+MATRIX_SUITES="tests/test_reduction_lang.py tests/test_define_op.py tests/test_lm_head.py"
 
-# Purity guard: the unified kernel language is the ONLY way to write a
-# kernel — any bespoke pl.pallas_call in the kernel library fails CI.
-if grep -rn "pl.pallas_call" src/repro/kernels/; then
-    echo "ci.sh: bespoke pl.pallas_call found in src/repro/kernels/ —" \
-         "port it to the unified language (repro.core.lang)" >&2
-    exit 1
-fi
-echo "ci.sh: kernel purity OK (no pl.pallas_call under src/repro/kernels/)"
+stage_deps() {
+    if ! python -c "import hypothesis, pytest" >/dev/null 2>&1; then
+        python -m pip install -e '.[dev]' \
+            || echo "ci.sh: pip install failed (offline?); running with the" \
+                    "_hypothesis_compat fixed-example fallback"
+    fi
+    if ! python -c "import pytest" >/dev/null 2>&1; then
+        echo "ci.sh: pytest is not installed and could not be installed" >&2
+        echo "ci.sh: the _hypothesis_compat fallback only covers hypothesis" >&2
+        return 1
+    fi
+}
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+stage_guards() {
+    # The unified kernel language is the ONLY way to write a kernel. Word
+    # boundary: catches `pl.pallas_call`, bare `pallas_call` and import
+    # aliasing (`from jax.experimental.pallas import pallas_call as pc`).
+    if grep -rnE '\bpallas_call\b' src/repro/kernels/; then
+        echo "ci.sh: bespoke pallas_call found in src/repro/kernels/ —" \
+             "port it to the unified language (repro.core.lang)" >&2
+        return 1
+    fi
+    # Backend expansion is core/'s job: nothing outside src/repro/core/ may
+    # touch jax.experimental.pallas (kernels would fork per backend again).
+    if grep -rn 'jax\.experimental\.pallas' src/repro --include='*.py' \
+            | grep -v '^src/repro/core/'; then
+        echo "ci.sh: jax.experimental.pallas imported outside" \
+             "src/repro/core/ — only the core expansions may touch pallas" >&2
+        return 1
+    fi
+    echo "ci.sh: kernel purity OK"
+}
 
-# Benchmark smoke: tiny shapes, one rep — every benchmark path must still
-# build and run, so benchmark drift breaks tier-1 instead of rotting silently.
-echo "ci.sh: benchmark smoke run"
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --smoke >/dev/null
-echo "ci.sh: benchmark smoke OK"
+stage_tests() {
+    python -m pytest -x -q "$@"
+}
+
+stage_matrix() {
+    local be
+    for be in jnp loops; do
+        echo "ci.sh: backend matrix — REPRO_BACKEND=$be"
+        REPRO_BACKEND=$be python -m pytest -q $MATRIX_SUITES
+    done
+}
+
+stage_bench() {
+    mkdir -p artifacts
+    python -m benchmarks.run --smoke --out artifacts/bench_smoke.json \
+        --check-manifest benchmarks/smoke_manifest.txt >/dev/null
+}
+
+for stage in $STAGES; do
+    case "$stage" in
+        deps|guards|tests|matrix|bench) ;;
+        *) echo "ci.sh: unknown stage '$stage' (one of: deps guards tests matrix bench)" >&2
+           exit 2 ;;
+    esac
+    echo "ci.sh: stage $stage ..."
+    t0=$SECONDS
+    if [[ "$stage" == "tests" ]]; then
+        "stage_$stage" "$@"
+    else
+        "stage_$stage"
+    fi
+    echo "ci.sh: stage $stage OK ($((SECONDS - t0))s)"
+done
+echo "ci.sh: all stages OK ($STAGES)"

@@ -250,6 +250,14 @@ class Spec:
         self._input_reduce_invariant = []
         zero_r = (0,) * len(self.reduce_axes)
         for t in self.inputs:
+            # stream=/reduce= are OUTPUT declarations (accumulation contracts);
+            # on an input they would be silently ignored — reject at build
+            # time so a mis-declared kernel fails loudly (surfaced by the
+            # first op whose outputs span several reduce granularities)
+            if t.stream or t.reduce is not None:
+                raise ValueError(
+                    f"input tile {t.name!r}: stream=/reduce= are output-only "
+                    "declarations (inputs are read at every visit)")
             blk = t.resolved_block()
             idx = t.resolved_index(self.grid)
             nb = tuple(s // bb for s, bb in zip(t.shape, blk))
@@ -328,6 +336,9 @@ class Spec:
         """The reduce axes this output ACCUMULATES over (sorted grid axes)."""
         if t.reduce is not None:
             r = tuple(sorted(int(a) for a in t.reduce))
+            if len(set(r)) != len(r):
+                raise ValueError(
+                    f"output tile {t.name!r}: duplicate axes in reduce={r}")
             if t.stream and r:
                 raise ValueError(
                     f"output tile {t.name!r}: stream=True means reduce=(), "

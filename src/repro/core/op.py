@@ -5,8 +5,9 @@ ONE ``define_op`` declaration: a kernel-language builder, a pure oracle, and a
 shape->defines derivation. The front-end owns everything the per-op host
 wrappers used to duplicate —
 
-  * backend selection   (``backend="auto"`` -> pallas, interpret off-TPU,
-                         via :func:`repro.core.device.default_device`)
+  * backend selection   (``backend="auto"`` -> ``$REPRO_BACKEND`` if set,
+                         else pallas; interpret off-TPU, via
+                         :func:`repro.core.device.default_device`)
   * defines derivation  (``derive_defines`` with ``fit_block`` + degradation
                          guards, per call, cached by the Device kernel cache)
   * kernel build/cache  (``Device.build_kernel`` — OCCA's runtime compile)
@@ -29,12 +30,14 @@ harnesses, serving) can enumerate every op and its oracle.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Callable, Mapping, Sequence
 
 import jax
 
 from . import tune as _tune
 from .device import default_device
+from .lang import BACKENDS
 
 __all__ = ["Op", "OpVJP", "define_op", "get_op", "oracle_vjp",
            "registered_ops"]
@@ -151,7 +154,14 @@ class Op:
         backend = params.pop("backend", "auto")
         interpret = params.pop("interpret", None)
         if backend == "auto":
-            backend = "pallas"
+            # REPRO_BACKEND pins what "auto" means process-wide — the CI
+            # backend-matrix re-runs the cross-backend suites under jnp and
+            # loops so a pallas-only regression can't hide behind the default
+            backend = os.environ.get("REPRO_BACKEND", "pallas")
+            if backend not in BACKENDS:
+                raise ValueError(
+                    f"REPRO_BACKEND={backend!r} is not a backend; expected "
+                    f"one of {BACKENDS}")
         return backend, interpret, params
 
     def _prepare(self, args, params) -> tuple[tuple, dict, dict]:

@@ -5,10 +5,12 @@ Each kernel ships with ``kernel.py`` (the unified-language builder),
 selection, defines derivation, kernel caching, VJP wiring and autotuning)
 and ``ref.py`` (pure-jnp oracle), validated against the oracle across
 backends and shape/dtype sweeps. EVERY kernel — ``matmul``, ``rmsnorm``,
-``ssm_scan`` and the full flash-attention family (forward, fused backward,
-single-token decode) — is written once in the unified kernel language
+``ssm_scan``, the full flash-attention family (forward, fused backward,
+single-token decode) and the fused LM head (``lm_head``: matmul + online-
+softmax row stats at multiple reduce granularities) — is written once in
+the unified kernel language
 (``repro.core.lang``) and expands to every backend; ``scripts/ci.sh`` fails
-on any bespoke ``pallas_call`` under this package.
+on any bespoke Pallas call site under this package.
 """
 
-from . import flash_attention, matmul, rmsnorm, ssm_scan  # noqa: F401
+from . import flash_attention, lm_head, matmul, rmsnorm, ssm_scan  # noqa: F401

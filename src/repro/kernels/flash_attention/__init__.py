@@ -1,6 +1,7 @@
 from .ops import (decode_attention, flash_attention, flash_attention_fwd,
                   flash_decode)
-from .ref import decode_ref, mha_chunked, mha_ref
+from .ref import decode_ref, mha_chunked, mha_ref, rolling_slot_pos
 
 __all__ = ["flash_attention", "flash_attention_fwd", "flash_decode",
-           "decode_attention", "mha_ref", "mha_chunked", "decode_ref"]
+           "decode_attention", "mha_ref", "mha_chunked", "decode_ref",
+           "rolling_slot_pos"]

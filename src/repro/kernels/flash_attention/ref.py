@@ -4,7 +4,20 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["mha_ref", "decode_ref"]
+__all__ = ["mha_ref", "decode_ref", "rolling_slot_pos"]
+
+
+def rolling_slot_pos(window: int, t: int):
+    """The slot -> absolute-position map of a rolling cache of ``window``
+    slots after ``t`` decoded tokens (slot = pos % window; -1 = never
+    written). THE definition of the rolling-cache layout contract — shared
+    by benchmarks, examples and the decode oracle's callers."""
+    import numpy as np
+
+    sp = np.full((window,), -1, np.int32)
+    for p in range(max(t - window, 0), t):
+        sp[p % window] = p
+    return sp
 
 
 def _expand_kv(k, n_q_heads):

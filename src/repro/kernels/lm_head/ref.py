@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the fused LM head (what the kernels MUST compute).
+
+These mirror the unfused model path exactly: full ``(R, V)`` f32 logits with
+the Megatron vocab-padding mask (``-1e30`` on columns >= vocab), then
+``logsumexp`` / gold gather / argmax on top. The kernels compute the same
+functions without materializing the logits (CE) or with a single fused pass
+(decode); the test suite asserts agreement across backends, dtypes and
+padding configurations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lm_head_ce_ref", "lm_head_logits_ref", "masked_logits_ref"]
+
+_PAD_LOGIT = -1e30
+
+
+def masked_logits_ref(x, w, *, vocab=None):
+    """x: (R, d) @ w: (d, V) in f32 with padded columns masked to -1e30."""
+    V = w.shape[1]
+    vocab = V if vocab is None else int(vocab)
+    logits = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    pad = jnp.where(jnp.arange(V) < vocab, 0.0, _PAD_LOGIT)
+    return logits + pad
+
+
+def lm_head_ce_ref(x, w, labels, *, vocab=None):
+    """Per-row token NLL: ``logsumexp(logits) - logits[label]``. labels may be
+    (R,) or (R, 1); returns (R,) f32."""
+    logits = masked_logits_ref(x, w, vocab=vocab)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lab = labels.reshape(-1)
+    gold = jnp.take_along_axis(logits, lab[:, None], axis=-1)[:, 0]
+    return lse - gold
+
+
+def lm_head_logits_ref(x, w, *, vocab=None):
+    """The decode-path oracle: (masked logits (R, V) f32, row max (R, 1) f32,
+    first-occurrence argmax over the TRUE vocab (R, 1) i32)."""
+    V = w.shape[1]
+    vocab = V if vocab is None else int(vocab)
+    logits = masked_logits_ref(x, w, vocab=vocab)
+    live = logits[:, :vocab]
+    m = live.max(-1, keepdims=True)
+    arg = jnp.argmax(live, axis=-1).astype(jnp.int32)[:, None]
+    return logits, m, arg

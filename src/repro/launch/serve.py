@@ -34,50 +34,15 @@ __all__ = ["apply_tuned_winners", "generate", "main"]
 
 def apply_tuned_winners(cfg, batch: int, prompt_len: int, max_len: int):
     """Serving warmup: adopt persisted ``op.tune`` winners for the attention
-    ops at THESE serving shapes — a pure cache lookup via the op registry
-    (``Op.cached_winner``), no builds or timed sweeps. Ops with a winner get
-    their defaults updated in-process so every subsequent layer call uses the
-    tuned block sizes. Returns ``{op_name: winner_defines}``."""
-    import repro.kernels  # noqa: F401 — registers the op families
-    from repro.core import registered_ops
+    AND fused LM-head ops at THESE serving shapes — a pure cache lookup via
+    the op registry (``Op.cached_winner``), no builds or timed sweeps. Ops
+    with a winner get their defaults updated in-process so every subsequent
+    layer call uses the tuned block sizes. Probe shapes and the adoption
+    loop live in :mod:`repro.launch.tuning` (shared with the train launcher
+    and ``python -m repro.tune_cli``). Returns ``{op_name: winner}``."""
+    from repro.launch.tuning import adopt_winners, serving_probes
 
-    h = getattr(cfg, "n_heads", 0)
-    hk = getattr(cfg, "n_kv_heads", 0) or h
-    hd = getattr(cfg, "resolved_head_dim", 0)
-    if not (h and hd):
-        return {}  # latent-attention archs (MLA) have no flash probes here
-    dtype = jnp.dtype(getattr(cfg, "dtype", "float32"))
-    window = getattr(cfg, "window", None)
-    m = min(max_len, window) if window else max_len
-    probe = jax.ShapeDtypeStruct  # shapes are all cached_winner derives from
-    probes = {
-        "flash_attention": (
-            (probe((batch, h, prompt_len, hd), dtype),
-             probe((batch, hk, prompt_len, hd), dtype),
-             probe((batch, hk, prompt_len, hd), dtype)),
-            dict(causal=True, window=window)),
-    }
-    # windowed archs probe too: rolling-window decode runs the unified
-    # kernel (slot_pos input tile), so its tuned block_kv matters as much
-    # as the dense-cache one — the cache holds m = min(max_len, window)
-    probes["flash_decode"] = (
-        (probe((batch, h, 1, hd), dtype),
-         probe((batch, hk, m, hd), dtype),
-         probe((batch, hk, m, hd), dtype)),
-        dict(window=window))
-    applied = {}
-    for name, (args, params) in probes.items():
-        op = registered_ops().get(name)
-        if op is None:
-            continue
-        try:
-            winner = op.cached_winner(args, **params)
-        except Exception:
-            continue  # probe shape invalid for this arch: no winner to adopt
-        if winner:
-            op.defaults.update(winner)
-            applied[name] = winner
-    return applied
+    return adopt_winners(serving_probes(cfg, batch, prompt_len, max_len))
 
 
 def generate(model: LM, params, prompts: np.ndarray, *, gen_tokens: int,

@@ -28,7 +28,36 @@ from repro.parallel.steps import build_train_step
 from repro.runtime import ChaosError, FailureInjector, StepWatchdog
 from repro.launch.mesh import make_local_mesh
 
-__all__ = ["TrainLoop", "main"]
+__all__ = ["TrainLoop", "apply_tuned_winners", "main", "validate_host_batch"]
+
+
+def validate_host_batch(tokens, vocab_size: int):
+    """Reject out-of-range token ids while the batch is still HOST data.
+
+    The jitted train step sees tracers, so ``LM.loss``'s label guard cannot
+    fire there — this is the host-side complement: a label >= vocab_size (or
+    negative) would otherwise silently train against padded-vocab logits."""
+    t = np.asarray(tokens)
+    if t.size == 0:
+        return
+    lo, hi = int(t.min()), int(t.max())
+    if lo < 0 or hi >= vocab_size:
+        raise ValueError(
+            f"batch tokens out of range [{lo}, {hi}] for vocab_size="
+            f"{vocab_size}: the jitted CE would silently train on padded-"
+            "vocab logits; fix the data pipeline")
+
+
+def apply_tuned_winners(cfg, global_batch: int, seq_len: int):
+    """Train warmup: adopt persisted ``op.tune`` winners for the train-step
+    shapes — causal flash attention at the full sequence and the fused-CE
+    LM head at ``B*(S-1)`` rows — before the step traces (the traced kernels
+    bake in whatever block sizes the ops resolve to). A pure cache lookup
+    (``$REPRO_CACHE_DIR``); run ``python -m repro.tune_cli --arch ... --train``
+    once per fleet hardware to populate it. Returns ``{op_name: winner}``."""
+    from repro.launch.tuning import adopt_winners, train_probes
+
+    return adopt_winners(train_probes(cfg, global_batch, seq_len))
 
 
 @dataclasses.dataclass
@@ -60,6 +89,11 @@ class TrainLoop:
             batch_shapes["prefix_embeddings"] = jax.ShapeDtypeStruct(
                 (self.global_batch, cfg.num_prefix_embeddings, cfg.d_model),
                 jnp.dtype(cfg.dtype))
+
+        # adopt persisted autotune winners BEFORE the step traces
+        tuned = apply_tuned_winners(cfg, self.global_batch, self.seq_len)
+        if tuned and self.verbose:
+            print(f"[train] adopted persisted tune winners: {tuned}")
 
         step_fn, shardings = build_train_step(model, optimizer, self.mesh,
                                               batch_shapes=batch_shapes)
@@ -101,6 +135,7 @@ class TrainLoop:
                     if self.injector:
                         self.injector.maybe_fail(step)
                     dstep, host_batch = prefetch.next()
+                    validate_host_batch(host_batch, cfg.vocab_size)
                     batch = {"tokens": jnp.asarray(host_batch)}
                     if cfg.frontend:
                         rs = np.random.Generator(np.random.Philox(
@@ -145,7 +180,8 @@ class TrainLoop:
         finally:
             prefetch.close()
         return {"history": history, "params": params, "opt": opt_state,
-                "straggler_flags": watchdog.flagged, "final_step": step}
+                "straggler_flags": watchdog.flagged, "final_step": step,
+                "tuned": tuned}
 
 
 def main(argv=None):

@@ -1,0 +1,111 @@
+"""Shared tune-probe shapes + winner adoption for the launchers and CLI.
+
+One place derives the kernel-op shapes a workload will hit — serving
+(prefill flash + decode flash + fused LM head at batch rows) and training
+(causal flash at the train sequence + fused-CE LM head at ``B*(S-1)`` rows)
+— as ``{op_name: (ShapeDtypeStruct args, params)}`` probe dicts, and one
+place (:func:`adopt_winners`) turns persisted ``op.tune`` winners for those
+probes into updated op defaults. Consumers:
+
+  * ``launch.serve.apply_tuned_winners``   warmup before the serve steps trace
+  * ``launch.train.apply_tuned_winners``   warmup before the train step traces
+  * ``repro.tune_cli``                     materializes the probes as real
+                                           arrays and runs the sweeps — the
+                                           fleet-wide pre-tuning entry point
+
+Probes are SHAPES ONLY (``jax.ShapeDtypeStruct``): ``Op.cached_winner`` is a
+pure cache lookup, so adoption performs zero builds and zero timed sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["serving_probes", "train_probes", "adopt_winners"]
+
+
+def _head_dims(cfg):
+    h = getattr(cfg, "n_heads", 0)
+    hk = getattr(cfg, "n_kv_heads", 0) or h
+    hd = getattr(cfg, "resolved_head_dim", 0)
+    return h, hk, hd
+
+
+def _lm_head_shapes(cfg, rows: int):
+    from repro.models import pad_vocab
+
+    d = cfg.d_model
+    vpad = pad_vocab(cfg.vocab_size)
+    dtype = jnp.dtype(getattr(cfg, "dtype", "float32"))
+    probe = jax.ShapeDtypeStruct
+    return (probe((rows, d), dtype), probe((d, vpad), dtype)), vpad
+
+
+def serving_probes(cfg, batch: int, prompt_len: int, max_len: int) -> dict:
+    """Probe shapes for one serving config: prefill attention, single-token
+    decode attention, and the fused last-token LM head (``batch`` rows)."""
+    probe = jax.ShapeDtypeStruct
+    probes = {}
+    h, hk, hd = _head_dims(cfg)
+    dtype = jnp.dtype(getattr(cfg, "dtype", "float32"))
+    window = getattr(cfg, "window", None)
+    if h and hd:  # latent-attention archs (MLA) have no flash probes here
+        probes["flash_attention"] = (
+            (probe((batch, h, prompt_len, hd), dtype),
+             probe((batch, hk, prompt_len, hd), dtype),
+             probe((batch, hk, prompt_len, hd), dtype)),
+            dict(causal=True, window=window))
+        # windowed archs probe too: rolling-window decode runs the unified
+        # kernel (slot_pos input tile) — the cache holds min(max_len, window)
+        m = min(max_len, window) if window else max_len
+        probes["flash_decode"] = (
+            (probe((batch, h, 1, hd), dtype),
+             probe((batch, hk, m, hd), dtype),
+             probe((batch, hk, m, hd), dtype)),
+            dict(window=window))
+    (x, w), _ = _lm_head_shapes(cfg, batch)
+    probes["lm_head_logits"] = ((x, w), dict(vocab=cfg.vocab_size))
+    return probes
+
+
+def train_probes(cfg, global_batch: int, seq_len: int) -> dict:
+    """Probe shapes for one train-step config: causal attention at the full
+    sequence and the fused-CE LM head at ``B * (S - 1)`` rows."""
+    probe = jax.ShapeDtypeStruct
+    probes = {}
+    h, hk, hd = _head_dims(cfg)
+    dtype = jnp.dtype(getattr(cfg, "dtype", "float32"))
+    if h and hd:
+        probes["flash_attention"] = (
+            (probe((global_batch, h, seq_len, hd), dtype),
+             probe((global_batch, hk, seq_len, hd), dtype),
+             probe((global_batch, hk, seq_len, hd), dtype)),
+            dict(causal=True, window=getattr(cfg, "window", None)))
+    rows = global_batch * max(seq_len - 1, 1)
+    (x, w), _ = _lm_head_shapes(cfg, rows)
+    labels = jax.ShapeDtypeStruct((rows, 1), jnp.int32)
+    probes["lm_head_ce"] = ((x, w, labels), dict(vocab=cfg.vocab_size))
+    return probes
+
+
+def adopt_winners(probes: dict) -> dict:
+    """Update op defaults from persisted ``op.tune`` winners for ``probes``
+    (``$REPRO_CACHE_DIR``) — a pure cache lookup via the op registry, no
+    builds, no timed sweeps. Returns ``{op_name: winner_defines}``."""
+    import repro.kernels  # noqa: F401 — registers the op families
+    from repro.core import registered_ops
+
+    applied = {}
+    for name, (args, params) in probes.items():
+        op = registered_ops().get(name)
+        if op is None:
+            continue
+        try:
+            winner = op.cached_winner(args, **params)
+        except Exception:
+            continue  # probe shape invalid for this arch: no winner to adopt
+        if winner:
+            op.defaults.update(winner)
+            applied[name] = winner
+    return applied

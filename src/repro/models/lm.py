@@ -14,8 +14,10 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ArchConfig
+from repro.kernels.lm_head import lm_head_ce, lm_head_logits
 from repro.layers import blocks
 from repro.layers.common import dense_init, rmsnorm
 from repro.layers.rope import sinusoidal_embedding
@@ -61,7 +63,8 @@ def build_program(cfg: ArchConfig) -> list[StackSpec]:
 class LM:
     def __init__(self, cfg: ArchConfig, *, remat: str = "none",
                  moe_dispatch: str = "einsum", scan_layers: bool = True,
-                 ce_chunks: int = 1):
+                 ce_chunks: int = 1, fused_head: bool = False,
+                 head_backend: str = "auto"):
         assert remat in ("none", "full", "dots")
         self.cfg = cfg
         self.dtype = jnp.dtype(cfg.dtype)
@@ -72,6 +75,14 @@ class LM:
         # ce_chunks > 1: compute CE in sequence chunks with rematerialized
         # per-chunk logits — peak logits memory drops by the chunk count
         self.ce_chunks = ce_chunks
+        # fused_head: route the LM head through the fused unified-language
+        # kernels — loss uses lm_head_ce (one matmul + online-softmax pass;
+        # nothing (B, S, Vpad)-shaped materializes, so ce_chunks is moot),
+        # _logits/decode use lm_head_logits (logits + row max + greedy argmax
+        # from the same pass). head_backend picks the kernel expansion
+        # ("auto" = pallas, or $REPRO_BACKEND).
+        self.fused_head = fused_head
+        self.head_backend = head_backend
         # scan_layers=False unrolls the layer loops (python for). Used by the
         # dry-run cost extrapolation: HLO cost analysis counts a while-loop
         # body ONCE regardless of trip count, so per-layer costs are measured
@@ -153,9 +164,23 @@ class LM:
             x = x + pos[None].astype(x.dtype)
         return shard_activation(x, "act_btd")
 
-    def _logits(self, params, x):
+    def _head(self, params):
+        """The (d_model, Vpad) head matrix (tied embeddings transposed)."""
         cfg = self.cfg
         head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        return head
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        head = self._head(params)
+        if self.fused_head:
+            b, s, d = x.shape
+            logits = lm_head_logits(x.reshape(b * s, d),
+                                    head.astype(x.dtype),
+                                    vocab=cfg.vocab_size,
+                                    backend=self.head_backend)
+            return shard_activation(logits.reshape(b, s, self.vpad),
+                                    "act_btv")
         logits = jnp.einsum("...d,dv->...v", x, head,
                             preferred_element_type=jnp.float32)
         # mask padded vocab entries
@@ -198,8 +223,9 @@ class LM:
                                      spec.n)
         return x, auxs.sum(0)
 
-    def forward(self, params, tokens, prefix_embeddings=None):
-        """Full-sequence forward. Returns (logits (B,S*,Vpad) f32, aux[2])."""
+    def _hidden_states(self, params, tokens, prefix_embeddings=None):
+        """Embed -> layer stacks -> final norm: the shared forward trunk.
+        Returns (hidden (B, S*, d), aux[2])."""
         cfg = self.cfg
         x = self._embed(params, tokens, prefix_embeddings)
         prefix_len = (prefix_embeddings.shape[1]
@@ -208,7 +234,11 @@ class LM:
         for spec, sp in zip(self.program, params["stacks"]):
             x, a = self._stack_forward(params, sp, x, spec, prefix_len)
             aux = aux + a
-        x = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+        return rmsnorm(x, params["final_norm"], eps=cfg.norm_eps), aux
+
+    def forward(self, params, tokens, prefix_embeddings=None):
+        """Full-sequence forward. Returns (logits (B,S*,Vpad) f32, aux[2])."""
+        x, aux = self._hidden_states(params, tokens, prefix_embeddings)
         return self._logits(params, x), aux
 
     def _ce_from_hidden(self, params, x, labels):
@@ -234,6 +264,36 @@ class LM:
                                 (xs, ls))
         return total / (b * s)
 
+    def _fused_ce(self, params, x, labels):
+        """Fused chunked CE through ``lm_head_ce``: one matmul + online-
+        softmax pass streams logsumexp and the gold logit out of the kernel
+        block by block — nothing (B, S, Vpad)-shaped is ever live, forward
+        OR backward (the custom VJP recomputes softmax - onehot blockwise
+        from the saved row stats)."""
+        b, s, d = x.shape
+        head = self._head(params).astype(x.dtype)
+        nll = lm_head_ce(x.reshape(b * s, d), head,
+                         labels.reshape(b * s, 1).astype(jnp.int32),
+                         vocab=self.cfg.vocab_size,
+                         backend=self.head_backend)
+        return nll.mean()
+
+    def _check_labels(self, labels):
+        """Labels >= vocab_size index PADDED-vocab columns: ``one_hot`` over
+        vpad plus the -1e30 pad mask keeps the loss finite, so training
+        would silently optimize against pad logits. Raise host-side whenever
+        the values are concrete (eager loss calls; jitted steps see tracers
+        and rely on the data pipeline / eager first step)."""
+        if isinstance(labels, jax.core.Tracer) or labels.size == 0:
+            return
+        host = np.asarray(labels)            # one device pull, checked on host
+        lo, hi = int(host.min()), int(host.max())
+        if lo < 0 or hi >= self.cfg.vocab_size:
+            raise ValueError(
+                f"labels out of range [{lo}, {hi}] for vocab_size="
+                f"{self.cfg.vocab_size} (vpad={self.vpad}): CE would "
+                "silently train on padded-vocab logits; clean the batch")
+
     # ----------------------------------------------------------------- loss
     def loss(self, params, batch):
         cfg = self.cfg
@@ -241,17 +301,15 @@ class LM:
         prefix = batch.get("prefix_embeddings")
         p = prefix.shape[1] if prefix is not None else 0
         labels = tokens[:, 1:]
-        if self.ce_chunks > 1:
-            # forward to the final hidden states, CE in seq chunks
-            x = self._embed(params, tokens, prefix)
-            prefix_len = p if (prefix is not None and cfg.prefix_lm) else 0
-            aux = ZERO = jnp.zeros(2, jnp.float32)
-            for spec, sp in zip(self.program, params["stacks"]):
-                x, a = self._stack_forward(params, sp, x, spec, prefix_len)
-                aux = aux + a
-            x = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+        self._check_labels(labels)
+        if self.fused_head or self.ce_chunks > 1:
+            # forward to the final hidden states; CE never sees full logits
+            x, aux = self._hidden_states(params, tokens, prefix)
             pred_x = x[:, p:-1] if x.shape[1] > p + 1 else x[:, p:]
-            ce = self._ce_from_hidden(params, pred_x, labels)
+            if self.fused_head:
+                ce = self._fused_ce(params, pred_x, labels)
+            else:
+                ce = self._ce_from_hidden(params, pred_x, labels)
         else:
             logits, aux = self.forward(params, tokens, prefix_embeddings=prefix)
             pred = logits[:, p:-1] if logits.shape[1] > p + 1 else logits[:, p:]
@@ -367,9 +425,9 @@ class LM:
                         "stacks": caches}
 
     # ------------------------------------------------------------- decoding
-    def decode_step(self, params, tokens, cache):
-        """One token for every sequence. tokens: (B, 1). Returns
-        (logits (B, Vpad), new_cache)."""
+    def _decode_hidden(self, params, tokens, cache):
+        """One decode step up to the final norm: tokens (B, 1) -> (hidden
+        (B, 1, d), new_cache). The head (logits / fused greedy) goes on top."""
         cfg = self.cfg
         pos = cache.get("pos", 0)
         # cache overflow is an ERROR, not a silent clobber of the last slot:
@@ -417,8 +475,34 @@ class LM:
             x, nc = self._scan_or_loop(body, x, (sp, sc), spec.n)
             new_caches.append(nc)
         x = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+        return x, {"pos": pos + 1, "stacks": new_caches}
+
+    def decode_step(self, params, tokens, cache):
+        """One token for every sequence. tokens: (B, 1). Returns
+        (logits (B, Vpad), new_cache)."""
+        x, new_cache = self._decode_hidden(params, tokens, cache)
         logits = self._logits(params, x)[:, 0]
-        return logits, {"pos": pos + 1, "stacks": new_caches}
+        return logits, new_cache
+
+    def greedy_step(self, params, tokens, cache):
+        """One greedy decode step: tokens (B, 1) -> (next token (B,),
+        logits (B, Vpad), new_cache). With ``fused_head`` the argmax comes
+        straight out of the fused LM-head kernel (its row-max/argmax outputs
+        share the logits pass) instead of a second scan over the vocab;
+        otherwise it falls back to ``greedy_token`` on the logits."""
+        x, new_cache = self._decode_hidden(params, tokens, cache)
+        if not self.fused_head:
+            logits = self._logits(params, x)[:, 0]
+            return self.greedy_token(logits), logits, new_cache
+        b, s, d = x.shape                    # s == 1
+        # .raw returns the kernel outputs unsliced — drop any pre-hook row
+        # padding (none at decode batch sizes, but keep the contract local)
+        logits, _m, arg = lm_head_logits.raw(
+            x.reshape(b, d), self._head(params).astype(x.dtype),
+            vocab=self.cfg.vocab_size, backend=self.head_backend)
+        logits = shard_activation(logits[:b].reshape(b, 1, self.vpad),
+                                  "act_btv")[:, 0]
+        return arg[:b, 0], logits, new_cache
 
     def greedy_token(self, logits):
         return jnp.argmax(logits[..., :self.cfg.vocab_size], axis=-1)

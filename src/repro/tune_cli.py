@@ -1,0 +1,145 @@
+"""``op.tune`` CLI — fleet-wide kernel pre-tuning.
+
+Sweeps registered ops' tuning knobs on real shapes and persists the winners
+under ``$REPRO_CACHE_DIR`` (default ``~/.cache/repro-occa``); every later
+``launch.serve`` / ``launch.train`` on the same hardware adopts them for
+free at warmup (``apply_tuned_winners`` — a pure cache lookup, zero builds).
+
+  # everything a serving + training deployment of an arch will hit
+  PYTHONPATH=src python -m repro.tune_cli --arch llama3_2_1b --reduced \\
+      --batch 4 --prompt-len 16 --max-len 64 --seq-len 64
+
+  # one op on its example shapes (a smoke-sized sweep)
+  PYTHONPATH=src python -m repro.tune_cli --op matmul --backend jnp
+
+  # what is tunable
+  PYTHONPATH=src python -m repro.tune_cli --list
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["main"]
+
+
+def _materialize(struct, rng, vocab: int):
+    """A ShapeDtypeStruct probe -> a real array (labels get valid token ids)."""
+    dtype = jnp.dtype(struct.dtype)
+    if dtype == jnp.int32:
+        return jnp.asarray(
+            rng.randint(0, max(int(vocab), 1), struct.shape), jnp.int32)
+    return jnp.asarray(rng.standard_normal(struct.shape), jnp.float32
+                       ).astype(dtype)
+
+
+def _tune_probe(op, args, params, *, backend, repeats, cache):
+    r = op.tune(tuple(args), backend=backend, repeats=repeats, cache=cache,
+                **params)
+    state = ("cache hit" if r.cached else
+             f"{len(r.trials)} trials, {len(r.skipped)} skipped")
+    winner = {k: r[k] for k in sorted(op.sweep)}
+    print(f"[tune] {op.name}: winner {winner} "
+          f"({state}, best {r.best_seconds * 1e6:.0f} us)")
+    return winner
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--list", action="store_true",
+                    help="list registered ops and their tuning sweeps")
+    ap.add_argument("--op", default=None,
+                    help="tune ONE op on its declared example shapes")
+    ap.add_argument("--arch", default=None,
+                    help="tune every op a serving+training deployment of "
+                         "this arch hits (repro.launch.tuning probe shapes)")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=None)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--serve", action="store_true",
+                    help="with --arch: only the serving probes")
+    ap.add_argument("--train", action="store_true",
+                    help="with --arch: only the train-step probes")
+    ap.add_argument("--backend", default="auto")
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--no-cache", action="store_true",
+                    help="sweep without persisting winners (a dry run)")
+    args = ap.parse_args(argv)
+
+    import repro.kernels  # noqa: F401 — registers the op families
+    from repro.core import registered_ops
+
+    ops = registered_ops()
+    if args.list:
+        for name in sorted(ops):
+            op = ops[name]
+            sweep = {k: op.sweep[k] for k in sorted(op.sweep)}
+            print(f"{name}: sweep={sweep or '(none)'}")
+        return 0
+
+    cache = not args.no_cache
+    if args.op is not None:
+        op = ops.get(args.op)
+        if op is None:
+            ap.error(f"unknown op {args.op!r}; known: {sorted(ops)}")
+        if not op.sweep:
+            ap.error(f"op {args.op!r} declares no tuning sweep")
+        ex_args, ex_params = op.example(np.random.RandomState(0))
+        try:
+            _tune_probe(op, tuple(jnp.asarray(a) for a in ex_args), ex_params,
+                        backend=args.backend, repeats=args.repeats, cache=cache)
+        except ValueError as e:
+            # example shapes are smoke-sized; sweep candidates may not tile
+            # them — real deployments tune through --arch (real shapes)
+            print(f"[tune] {op.name}: {e} — the example shapes are smoke-"
+                  "sized; tune real shapes via --arch")
+            return 1
+        return 0
+
+    if args.arch is None:
+        ap.error("pass --list, --op NAME or --arch NAME")
+
+    from repro.configs import get_config, reduced as reduce_cfg
+    from repro.launch.tuning import serving_probes, train_probes
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    max_len = args.max_len or (args.prompt_len + 32)
+    probes = {}
+    both = not (args.serve ^ args.train)
+    if args.serve or both:
+        probes.update(serving_probes(cfg, args.batch, args.prompt_len, max_len))
+    if args.train or both:
+        probes.update(train_probes(cfg, args.batch, args.seq_len))
+
+    print(f"[tune] arch={args.arch} backend={args.backend} "
+          f"probes={sorted(probes)} (device={jax.default_backend()})")
+    rng = np.random.RandomState(0)
+    for name in sorted(probes):
+        op = ops.get(name)
+        if op is None or not op.sweep:
+            continue
+        structs, params = probes[name]
+        real = tuple(_materialize(s, rng, cfg.vocab_size) for s in structs)
+        try:
+            _tune_probe(op, real, params, backend=args.backend,
+                        repeats=args.repeats, cache=cache)
+        except ValueError as e:
+            print(f"[tune] {name}: skipped ({e})")
+    from repro.core import tune_cache_dir
+    if cache:
+        print(f"[tune] winners persisted under {tune_cache_dir()} — serving "
+              "and training warmup adopt them automatically")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

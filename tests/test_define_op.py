@@ -414,6 +414,58 @@ def test_ops_are_declarations_not_wrappers():
 
 
 # ---------------------------------------------------------------------------
+# purity: the tightened CI guard, mirrored as a test (word-boundary
+# pallas_call under kernels/; jax.experimental.pallas only under core/)
+# ---------------------------------------------------------------------------
+
+def test_kernel_purity_and_pallas_import_containment():
+    import pathlib
+    import re
+
+    root = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+    bespoke, leaked = [], []
+    for p in sorted(root.rglob("*.py")):
+        rel = p.relative_to(root)
+        text = p.read_text()
+        # word boundary: catches `pl.pallas_call`, bare `pallas_call` and
+        # `from jax.experimental.pallas import pallas_call as pc` aliasing
+        if rel.parts[0] == "kernels" and re.search(r"\bpallas_call\b", text):
+            bespoke.append(str(rel))
+        if rel.parts[0] != "core" and "jax.experimental.pallas" in text:
+            leaked.append(str(rel))
+    assert bespoke == [], f"bespoke pallas_call sites: {bespoke}"
+    assert leaked == [], \
+        f"jax.experimental.pallas outside src/repro/core/: {leaked}"
+
+
+# ---------------------------------------------------------------------------
+# REPRO_BACKEND: the CI backend matrix's env pin for backend="auto"
+# ---------------------------------------------------------------------------
+
+def test_repro_backend_env_pins_auto(monkeypatch):
+    rng = np.random.RandomState(9)
+    a = jnp.asarray(rng.randn(14, 14), jnp.float32)  # unique shape: fresh build
+    monkeypatch.setenv("REPRO_BACKEND", "loops")
+    dev = default_device("loops", None)
+    builds_before = dev.stats.builds
+    got = matmul(a, a, block_m=7, block_n=7, block_k=14)  # backend="auto"
+    assert dev.stats.builds == builds_before + 1  # built on the LOOPS device
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(matmul.reference(a, a)),
+                               rtol=1e-4, atol=1e-4)
+    # explicit backends are never overridden by the env pin
+    got_j = matmul(a, a, block_m=7, block_n=7, block_k=14, backend="jnp")
+    np.testing.assert_allclose(np.asarray(got_j), np.asarray(got),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_repro_backend_env_rejects_unknown(monkeypatch):
+    monkeypatch.setenv("REPRO_BACKEND", "cuda")
+    with pytest.raises(ValueError, match="REPRO_BACKEND"):
+        matmul(jnp.ones((4, 4)), jnp.ones((4, 4)))
+
+
+# ---------------------------------------------------------------------------
 # stream-output validation (the ssm_scan-enabling language extension)
 # ---------------------------------------------------------------------------
 
