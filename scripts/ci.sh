@@ -7,6 +7,9 @@
 #            src/repro/kernels/ (word-boundary — aliasing `from ... import
 #            pallas_call` counts too) and no jax.experimental.pallas import
 #            outside src/repro/core/
+#   analyze  the kernel static analyzer (python -m repro.lint_kernels
+#            --strict) over every registered op + its autotune sweep;
+#            findings also land as JSON in artifacts/analyze.json
 #   tests    the tier-1 suite (extra args after the stage selector are
 #            forwarded to pytest)
 #   matrix   backend matrix: the cross-backend agreement suites re-run under
@@ -25,7 +28,7 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
-STAGES="deps guards tests matrix bench"
+STAGES="deps guards analyze tests matrix bench"
 if [[ "${1:-}" == "--stage" ]]; then
     [[ $# -ge 2 ]] || { echo "ci.sh: --stage needs a name (one of: $STAGES)" >&2; exit 2; }
     STAGES="$2"
@@ -68,6 +71,11 @@ stage_guards() {
     echo "ci.sh: kernel purity OK"
 }
 
+stage_analyze() {
+    mkdir -p artifacts
+    python -m repro.lint_kernels --strict --json artifacts/analyze.json
+}
+
 stage_tests() {
     python -m pytest -x -q "$@"
 }
@@ -88,8 +96,8 @@ stage_bench() {
 
 for stage in $STAGES; do
     case "$stage" in
-        deps|guards|tests|matrix|bench) ;;
-        *) echo "ci.sh: unknown stage '$stage' (one of: deps guards tests matrix bench)" >&2
+        deps|guards|analyze|tests|matrix|bench) ;;
+        *) echo "ci.sh: unknown stage '$stage' (one of: deps guards analyze tests matrix bench)" >&2
            exit 2 ;;
     esac
     echo "ci.sh: stage $stage ..."

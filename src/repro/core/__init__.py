@@ -6,6 +6,8 @@ adapted to JAX/TPU. See DESIGN.md §2 for the keyword-by-keyword mapping.
 """
 
 from .lang import BACKENDS, Ctx, Scratch, Spec, Tile, TileRef, cdiv, expand
+from .analyze import (ANALYZE_MODES, AnalysisError, AnalysisWarning, Finding,
+                      Report, analysis_mode, analyze_spec, set_analysis_mode)
 from .device import Device, BuildStats, default_device, fit_block
 from .kernel import Kernel
 from .memory import Memory
@@ -14,20 +16,27 @@ from .tune import (SCHEMA_VERSION, TuneResult, autotune, cached_winner,
                    tune_cache_dir, tune_cache_key)
 
 __all__ = [
+    "ANALYZE_MODES",
+    "AnalysisError",
+    "AnalysisWarning",
     "BACKENDS",
     "BuildStats",
     "Ctx",
     "Device",
+    "Finding",
     "Kernel",
     "Memory",
     "Op",
     "OpVJP",
+    "Report",
     "SCHEMA_VERSION",
     "Scratch",
     "Spec",
     "Tile",
     "TileRef",
     "TuneResult",
+    "analysis_mode",
+    "analyze_spec",
     "autotune",
     "cached_winner",
     "cdiv",
@@ -38,6 +47,7 @@ __all__ = [
     "get_op",
     "oracle_vjp",
     "registered_ops",
+    "set_analysis_mode",
     "tune_cache_dir",
     "tune_cache_key",
 ]

@@ -1,0 +1,726 @@
+"""Static analysis of unified-language kernel specs.
+
+The language's portability claim — one ``body(ctx, *tiles)`` expands
+identically to jnp/loops/pallas — only holds for programs whose semantics do
+not depend on what a backend happens to do with memory the contract leaves
+undefined. The jnp/loops expansions zero-fill output blocks and scratch, so a
+kernel that forgets its ``reduce_first`` init *passes* there and corrupts on a
+real TPU, where first-visit contents are garbage. This module is the
+machine-checked safety net: a verifier that runs on every kernel build
+(mirroring how compiler IR verifiers gate each pass).
+
+Two complementary analyses:
+
+``check_grid_invariants(spec)``
+    Concrete-grid enumeration of every tile's index map: bounds
+    (``BOUNDS_INDEX``), write races — distinct (outer x slot) cells mapping
+    to one output block (``RACE_PARALLEL_WRITE``), index maps depending on
+    accumulated reduce axes (``SEMANTICS_ACC_INDEX``), and blocks never
+    visited (``COVERAGE_UNWRITTEN``). These are *certain* bugs and raise at
+    ``Spec`` construction (``lang.Spec.__post_init__`` delegates here).
+
+``trace_body(spec, defines)`` + ``check_body(spec, events)``
+    An abstract interpretation of the kernel body: the body runs once under
+    ``jax.eval_shape`` with a recording ``_RecCtx``/``_RecRef`` that logs
+    every ref read/write together with the active ``when``/``cell_when``
+    predicate context (``is_first``/``reduce_first(d)``/... become symbolic
+    tokens; data- or grid-dependent predicates are *opaque* — they may skip).
+    From the event log:
+
+      * ``LIVENESS_SCRATCH_UNINIT`` — scratch read with no write that is
+        guaranteed on the first reduce visit (missing ``reduce_first`` init).
+      * ``COVERAGE_SKIP_NO_INIT`` — an output block whose every write sits
+        under a skippable predicate, with no guaranteed first-visit init and
+        no guaranteed last-visit flush (the block can be left undefined); or
+        an output read before any guaranteed write (read-modify-write into
+        undefined first-visit contents).
+      * ``SEMANTICS_PARALLEL_CARRIED`` — a ``dimension_semantics`` override
+        marks a reduce axis ``"parallel"`` while scratch or an output
+        accumulation carries a dependence along it.
+
+Soundness of the "guaranteed init" rule: ``is_first`` implies every
+``reduce_first(d)``, so a write whose whole predicate context is drawn from
+``{is_first, reduce_first(*)}`` executes on the very first visit of the
+reduce space — after which the ref (scratch persists across the whole space;
+an accumulated output block across its own visits) is defined forever. For a
+block of an output accumulating over axes ``A``, the tags guaranteed on the
+*block's* first (resp. last) visit are ``reduce_first(d)`` (resp.
+``reduce_last(d)``) for ``d`` in ``A`` — plus ``is_first``/``is_last`` only
+when ``A`` is the full reduce space.
+
+Findings carry a stable ``code`` (also embedded ``[CODE]`` in the message);
+``AnalysisError`` subclasses ``ValueError`` so the autotuner's
+skip-invalid-candidates handling keeps working. Strictness is a process
+knob (``$REPRO_ANALYZE`` / :func:`set_analysis_mode`, per-build override via
+``Device.build_kernel(..., analyze=...)``):
+
+  ``off``     skip body analysis (grid invariants still guard Spec build)
+  ``warn``    report every finding as an :class:`AnalysisWarning`
+  ``error``   raise on error findings, warn on coverage ones   (default)
+  ``strict``  raise on any finding (what ``repro.lint_kernels --strict`` uses)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import os
+import warnings
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ANALYZE_MODES",
+    "AnalysisError",
+    "AnalysisWarning",
+    "Finding",
+    "Report",
+    "analysis_mode",
+    "analyze_spec",
+    "check_body",
+    "check_built_spec",
+    "check_grid_invariants",
+    "check_semantics",
+    "set_analysis_mode",
+    "trace_body",
+]
+
+ANALYZE_MODES = ("off", "warn", "error", "strict")
+
+# finding code -> severity; "error" findings are certain (or near-certain)
+# cross-backend divergence, "coverage" findings are may-leave-undefined
+# hazards gated by the strictness knob
+SEVERITY = {
+    "BOUNDS_INDEX": "error",
+    "BOUNDS_SCRATCH": "error",
+    "RACE_PARALLEL_WRITE": "error",
+    "SEMANTICS_ACC_INDEX": "error",
+    "COVERAGE_UNWRITTEN": "error",
+    "LIVENESS_SCRATCH_UNINIT": "error",
+    "SEMANTICS_PARALLEL_CARRIED": "error",
+    "COVERAGE_SKIP_NO_INIT": "coverage",
+    "TRACE_INCOMPLETE": "coverage",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer verdict: a stable code + the offending spec/ref/message."""
+
+    code: str
+    spec: str
+    subject: str  # tile/scratch name (or "" for spec-level findings)
+    message: str
+
+    @property
+    def severity(self) -> str:
+        return SEVERITY.get(self.code, "error")
+
+    def __str__(self):
+        return f"[{self.code}] kernel {self.spec!r}: {self.message}"
+
+
+class AnalysisError(ValueError):
+    """A rejected kernel spec. Subclasses ValueError on purpose: autotune
+    treats build-time ValueErrors as skippable invalid candidates."""
+
+    def __init__(self, findings):
+        self.findings = tuple(findings)
+        super().__init__("\n".join(str(f) for f in self.findings))
+
+
+class AnalysisWarning(UserWarning):
+    """A non-fatal analyzer finding (coverage class, or warn mode)."""
+
+
+@dataclasses.dataclass
+class Report:
+    """All findings for one spec + the dispatch policy per strictness mode."""
+
+    spec: str
+    findings: list
+
+    @property
+    def errors(self):
+        return [f for f in self.findings if f.severity == "error"]
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def emit(self, mode: str) -> None:
+        """Raise/warn per the strictness mode (see module docstring)."""
+        if mode not in ANALYZE_MODES:
+            raise ValueError(
+                f"unknown analyze mode {mode!r}; expected one of {ANALYZE_MODES}")
+        if mode == "off" or not self.findings:
+            return
+        if mode == "strict" and self.findings:
+            raise AnalysisError(self.findings)
+        if mode == "error" and self.errors:
+            raise AnalysisError(self.errors)
+        for f in self.findings:
+            if mode == "warn" or f.severity != "error":
+                warnings.warn(str(f), AnalysisWarning, stacklevel=3)
+
+
+# ---------------------------------------------------------------------------
+# Strictness knob
+# ---------------------------------------------------------------------------
+
+_MODE_OVERRIDE: str | None = None
+
+
+def analysis_mode() -> str:
+    """The process-wide strictness mode: :func:`set_analysis_mode` override,
+    else ``$REPRO_ANALYZE``, else ``"error"``."""
+    if _MODE_OVERRIDE is not None:
+        return _MODE_OVERRIDE
+    mode = os.environ.get("REPRO_ANALYZE", "error")
+    if mode not in ANALYZE_MODES:
+        raise ValueError(
+            f"REPRO_ANALYZE={mode!r} is not an analyze mode; expected one "
+            f"of {ANALYZE_MODES}")
+    return mode
+
+
+def set_analysis_mode(mode: str | None) -> str | None:
+    """Override the process-wide mode (None restores ``$REPRO_ANALYZE``).
+    Returns the previous override so callers can restore it."""
+    global _MODE_OVERRIDE
+    if mode is not None and mode not in ANALYZE_MODES:
+        raise ValueError(
+            f"unknown analyze mode {mode!r}; expected one of {ANALYZE_MODES}")
+    prev, _MODE_OVERRIDE = _MODE_OVERRIDE, mode
+    return prev
+
+
+# ---------------------------------------------------------------------------
+# Concrete-grid invariants (index-map enumeration)
+# ---------------------------------------------------------------------------
+
+def _bounds_detail(bi, nb):
+    for ax, (i, n) in enumerate(zip(bi, nb)):
+        if not 0 <= i < n:
+            return f"axis {ax}: block index {i} not in [0, {n})"
+    return f"rank {len(bi)} != block-grid rank {len(nb)}"
+
+
+def check_grid_invariants(spec):
+    """Enumerate every tile's index map over the whole grid.
+
+    Returns ``(findings, input_reduce_invariant)`` — the latter is the
+    per-input hoisting mask the jnp expansion needs (computed here so the
+    grid is walked exactly once per tile). All findings from this pass are
+    errors; ``lang.Spec.__post_init__`` raises on any."""
+    findings = []
+    k = len(spec.grid) - len(spec.reduce_axes)
+    zero_r = (0,) * len(spec.reduce_axes)
+
+    input_reduce_invariant = []
+    for t in spec.inputs:
+        blk = t.resolved_block()
+        idx = t.resolved_index(spec.grid)
+        nb = tuple(s // bb for s, bb in zip(t.shape, blk))
+        inv = True
+        bi0 = None
+        for cell in np.ndindex(*spec.grid):
+            bi = tuple(int(i) for i in idx(*cell))
+            if len(bi) != len(nb) or any(
+                    not (0 <= i < n) for i, n in zip(bi, nb)):
+                findings.append(Finding(
+                    "BOUNDS_INDEX", spec.name, t.name,
+                    f"input tile {t.name!r}: index map returned block "
+                    f"{bi} for grid cell {cell}, outside the {nb} block "
+                    f"grid (shape {t.shape}, block {blk}; "
+                    f"{_bounds_detail(bi, nb)})"))
+                return findings, input_reduce_invariant
+            if inv and spec.reduce_axes:
+                # C-order walk: each outer group starts at reduce ids 0, so
+                # that cell's bi IS the group's reference — one index-map
+                # call per cell, not two
+                if cell[k:] == zero_r:
+                    bi0 = bi
+                elif bi != bi0:
+                    inv = False
+        input_reduce_invariant.append(inv)
+
+    for i, s in enumerate(spec.scratch):
+        if any(d <= 0 for d in s.shape):
+            findings.append(Finding(
+                "BOUNDS_SCRATCH", spec.name, f"scratch[{i}]",
+                f"scratch[{i}]: shape {s.shape} has a non-positive "
+                "dimension"))
+
+    # Per-output reduce granularity: an output accumulates over SOME of the
+    # reduce axes (all by default; none when streamed) and its index map may
+    # depend only on the REMAINING axes — the accumulate-then-flush contract
+    # needs a destination that is stable along exactly the accumulated axes.
+    # Distinct (outer x non-accumulated) cells must write distinct blocks,
+    # covering every block exactly once.
+    for t in spec.outputs:
+        blk = t.resolved_block()
+        idx = t.resolved_index(spec.grid)
+        nb = tuple(s // b for s, b in zip(t.shape, blk))
+        nblocks = math.prod(nb)
+        slot_axes = spec.output_slot_axes(t)
+        kind = "stream output" if t.stream else "output"
+        seen: dict[tuple, tuple] = {}
+        visited: set[tuple] = set()
+        for cell in np.ndindex(*spec.grid):
+            bi = tuple(int(i) for i in idx(*cell))
+            if len(bi) != len(nb) or any(
+                    not (0 <= i < n) for i, n in zip(bi, nb)):
+                findings.append(Finding(
+                    "BOUNDS_INDEX", spec.name, t.name,
+                    f"{kind} tile {t.name!r}: index map returned block "
+                    f"{bi} for grid cell {cell}, outside the {nb} block "
+                    f"grid (shape {t.shape}, block {blk}; "
+                    f"{_bounds_detail(bi, nb)})"))
+                return findings, input_reduce_invariant
+            key = cell[:k] + tuple(cell[a] for a in slot_axes)
+            if key in seen:
+                if seen[key] != bi:
+                    findings.append(Finding(
+                        "SEMANTICS_ACC_INDEX", spec.name, t.name,
+                        f"output tile {t.name!r}: index map depends on reduce "
+                        f"axes it accumulates over (cell {cell} -> {bi}, "
+                        f"expected {seen[key]}); exclude those axes via "
+                        "Tile(reduce=...) or stream=True"))
+                    return findings, input_reduce_invariant
+            else:
+                if bi in visited:
+                    hint = ("streamed outputs must write a distinct block "
+                            "per grid cell" if t.stream else
+                            "grid-carried accumulation needs an explicit "
+                            "reduce axis (Spec(reduce_axes=...) + "
+                            "Tile(reduce=...)) — implicit revisits are "
+                            "rejected")
+                    findings.append(Finding(
+                        "RACE_PARALLEL_WRITE", spec.name, t.name,
+                        f"{kind} tile {t.name!r} block {bi} visited more "
+                        f"than once by distinct cells; {hint}"))
+                    return findings, input_reduce_invariant
+                seen[key] = bi
+                visited.add(bi)
+        if len(seen) != nblocks:
+            findings.append(Finding(
+                "COVERAGE_UNWRITTEN", spec.name, t.name,
+                f"{kind} tile {t.name!r}: {len(seen)} blocks visited but "
+                f"{nblocks} exist; kernel would leave garbage"))
+            return findings, input_reduce_invariant
+
+    return findings, input_reduce_invariant
+
+
+def check_semantics(spec):
+    """``dimension_semantics`` consistency: an axis the pallas pipeline may
+    reorder ("parallel") must not carry sequential state along it."""
+    sem = getattr(spec, "dimension_semantics", None)
+    if not sem:
+        return []
+    findings = []
+    for a, s in enumerate(sem):
+        if s != "parallel" or a not in spec.reduce_axes:
+            continue
+        carried = ["scratch"] if spec.scratch else []
+        carried += [f"output {t.name!r}" for t in spec.outputs
+                    if a in spec.output_reduce_axes(t)]
+        if carried:
+            findings.append(Finding(
+                "SEMANTICS_PARALLEL_CARRIED", spec.name, f"axis {a}",
+                f"dimension_semantics marks reduce axis {a} \"parallel\" "
+                f"but {', '.join(carried)} carries a sequential dependence "
+                "along it (its reduce_id feeds carried state); declare the "
+                "axis \"arbitrary\""))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Abstract interpretation of the body (recording trace)
+# ---------------------------------------------------------------------------
+
+class _Opaque:
+    """A predicate the analyzer cannot prove (data/grid-dependent, or any
+    boolean algebra over symbolic tokens). Opaque guards may skip."""
+
+    _inst = None
+
+    def __new__(cls):
+        if cls._inst is None:
+            cls._inst = super().__new__(cls)
+        return cls._inst
+
+    def __and__(self, other):
+        return self
+
+    __rand__ = __or__ = __ror__ = __xor__ = __rxor__ = __and__
+
+    def __invert__(self):
+        return self
+
+    def __repr__(self):
+        return "<opaque predicate>"
+
+
+_OPAQUE = _Opaque()
+
+
+class _Pred:
+    """A symbolic predicate token: the analyzer knows exactly when it holds
+    (``("is_first",)``, ``("reduce_first", d)``, ...). Any algebra over it
+    degrades to opaque — conservative, never unsound."""
+
+    __slots__ = ("key",)
+
+    def __init__(self, key):
+        self.key = key
+
+    def __and__(self, other):
+        return _OPAQUE
+
+    __rand__ = __or__ = __ror__ = __xor__ = __rxor__ = __and__
+
+    def __invert__(self):
+        return _OPAQUE
+
+    def __bool__(self):
+        raise TypeError(
+            f"predicate {self.key} is symbolic under analysis (and traced "
+            "at run time): use ctx.when/ctx.cell_when, not Python `if`")
+
+    def __repr__(self):
+        return f"<pred {self.key}>"
+
+
+@dataclasses.dataclass(frozen=True)
+class _Event:
+    op: str       # "read" | "write"
+    kind: str     # "input" | "output" | "scratch"
+    name: str
+    ctx: tuple    # predicate-context tags active at the access
+
+
+class _RecRef:
+    """Recording TileRef: same read/write surface, logs every access with
+    the active predicate context, carries abstract values so the body keeps
+    tracing."""
+
+    __slots__ = ("_trace", "kind", "name", "_value")
+
+    def __init__(self, trace, kind, name, value):
+        self._trace = trace
+        self.kind = kind
+        self.name = name
+        self._value = value
+
+    def __getitem__(self, idx):
+        self._trace.record("read", self)
+        return self._value[idx]
+
+    def __setitem__(self, idx, val):
+        self._trace.record("write", self)
+        if idx is Ellipsis or idx == slice(None):
+            self._value = jnp.broadcast_to(
+                val, self._value.shape).astype(self._value.dtype)
+        else:
+            self._value = self._value.at[idx].set(val)
+
+    @property
+    def value(self):
+        self._trace.record("read", self)
+        return self._value
+
+    @property
+    def shape(self):
+        return self._value.shape
+
+    @property
+    def dtype(self):
+        return self._value.dtype
+
+
+class _RecCtx:
+    """Recording Ctx: same surface as :class:`lang.Ctx`, but reduce-position
+    predicates are symbolic tokens and ``when``/``cell_when`` run their thunk
+    unconditionally while pushing the classified predicate onto the context
+    stack. Backend flags are all False (bodies are backend-agnostic by
+    contract; a backend-branching body traces its generic path)."""
+
+    backend = "analyze"
+    is_pallas = is_jnp = is_loops = False
+
+    def __init__(self, trace, spec, defines, gids):
+        self._trace = trace
+        self._spec = spec
+        self.D = defines
+        self._gids = tuple(gids)
+        self.grid = spec.grid
+        self._reduce_axes = tuple(spec.reduce_axes)
+        self.scratch = ()
+
+    # --- grid ids ---------------------------------------------------------
+    def outer_id(self, d: int):
+        return self._gids[d]
+
+    def outer_dim(self, d: int) -> int:
+        return self.grid[d]
+
+    def reduce_id(self, d: int = 0):
+        return self._gids[self._reduce_axes[d]]
+
+    def reduce_dim(self, d: int = 0) -> int:
+        return self.grid[self._reduce_axes[d]]
+
+    # --- reduce-position predicates: symbolic tokens ----------------------
+    def reduce_first(self, d: int = 0):
+        return _Pred(("reduce_first", int(d)))
+
+    def reduce_last(self, d: int = 0):
+        return _Pred(("reduce_last", int(d)))
+
+    @property
+    def is_first(self):
+        return True if not self._reduce_axes else _Pred(("is_first",))
+
+    @property
+    def is_last(self):
+        return True if not self._reduce_axes else _Pred(("is_last",))
+
+    # --- predicated execution --------------------------------------------
+    def when(self, pred):
+        return self._trace.guard(pred, "when")
+
+    def cell_when(self, pred):
+        return self._trace.guard(pred, "cell_when")
+
+    # --- the rest of the Ctx surface --------------------------------------
+    def lane_ids(self, n: int):
+        return jnp.arange(n)
+
+    def barrier(self, *_fence):
+        return None
+
+    def cache(self, ref):
+        return ref[...]
+
+    def private(self, value):
+        return value
+
+
+class _Trace:
+    """The event log + predicate-context stack shared by one body run."""
+
+    def __init__(self):
+        self.events: list[_Event] = []
+        self._stack: list[tuple] = []
+        self._serial = itertools.count()
+
+    def record(self, op, ref):
+        self.events.append(
+            _Event(op, ref.kind, ref.name, tuple(self._stack)))
+
+    def guard(self, pred, kind):
+        """The when/cell_when decorator under analysis: classify the
+        predicate, push it, run the thunk unconditionally (every guarded
+        path is traced), pop."""
+        if isinstance(pred, _Pred):
+            tag = pred.key
+        elif isinstance(pred, (bool, np.bool_)):
+            # a defines-derived compile-time constant: True guards nothing,
+            # False statically removes the code (matches the real Ctx)
+            tag = None if pred else False
+        elif pred is _OPAQUE:
+            tag = (kind, next(self._serial))
+        else:
+            try:  # concrete scalars fold like Python bools...
+                tag = None if bool(pred) else False
+            except Exception:  # ...tracers (grid/data-dependent) are opaque
+                tag = (kind, next(self._serial))
+
+        def deco(fn):
+            if tag is False:
+                return fn
+            if tag is not None:
+                self._stack.append(tag)
+            try:
+                fn()
+            finally:
+                if tag is not None:
+                    self._stack.pop()
+            return fn
+
+        return deco
+
+
+def trace_body(spec, defines=None):
+    """Run the kernel body once under ``jax.eval_shape`` with recording
+    refs/ctx; returns the ordered read/write event log. No real compute —
+    block values are abstract, grid ids are traced i32 scalars (so
+    grid-dependent predicates stay opaque rather than folding for one cell)."""
+    defines = defines if defines is not None else SimpleNamespace()
+    trace = _Trace()
+    i32 = jnp.int32
+
+    def run(gids, ins, outs, scr):
+        ctx = _RecCtx(trace, spec, defines, gids)
+        in_refs = [_RecRef(trace, "input", t.name, v)
+                   for t, v in zip(spec.inputs, ins)]
+        out_refs = [_RecRef(trace, "output", t.name, v)
+                    for t, v in zip(spec.outputs, outs)]
+        ctx.scratch = tuple(
+            _RecRef(trace, "scratch", f"scratch[{i}]", v)
+            for i, v in enumerate(scr))
+        spec.body(ctx, *in_refs, *out_refs)
+        return ()
+
+    jax.eval_shape(
+        run,
+        [jax.ShapeDtypeStruct((), i32) for _ in spec.grid],
+        [jax.ShapeDtypeStruct(t.resolved_block(), t.dtype)
+         for t in spec.inputs],
+        [jax.ShapeDtypeStruct(t.resolved_block(), t.dtype)
+         for t in spec.outputs],
+        [jax.ShapeDtypeStruct(s.shape, s.dtype) for s in spec.scratch],
+    )
+    return trace.events
+
+
+def _guaranteed(ctx_tags, allowed) -> bool:
+    """True if an access under these tags is guaranteed to execute whenever
+    every predicate in ``allowed`` holds (i.e. every guard is provable)."""
+    return all(tag in allowed for tag in ctx_tags)
+
+
+def _first_last_sets(spec, t):
+    """The predicate tags guaranteed to hold on an output block's first and
+    last visit (see module docstring)."""
+    acc = set(spec.output_reduce_axes(t))
+    n_red = len(spec.reduce_axes)
+    first = {("reduce_first", d) for d, a in enumerate(spec.reduce_axes)
+             if a in acc}
+    last = {("reduce_last", d) for d, a in enumerate(spec.reduce_axes)
+            if a in acc}
+    if n_red == 0 or acc == set(spec.reduce_axes):
+        first.add(("is_first",))
+        last.add(("is_last",))
+    return first, last
+
+
+_SCRATCH_FIRST_BASE = frozenset([("is_first",)])
+
+
+def check_body(spec, events):
+    """Liveness/coverage verdicts from one body trace (see module docstring)."""
+    findings = []
+    n_red = len(spec.reduce_axes)
+    scratch_first = set(_SCRATCH_FIRST_BASE) | {
+        ("reduce_first", d) for d in range(n_red)}
+
+    def read_before_init(name, firstset, code, what):
+        """Walk the ref's events in order: a read is safe once a write
+        guaranteed on the first visit has happened, or when an earlier write
+        dominates it within the same guarded region (its context tags are a
+        subset of the read's)."""
+        init = False
+        prior_writes: list[frozenset] = []
+        for ev in events:
+            if ev.name != name:
+                continue
+            if ev.op == "write":
+                if _guaranteed(ev.ctx, firstset):
+                    init = True
+                prior_writes.append(frozenset(ev.ctx))
+            elif not init:
+                rc = set(ev.ctx)
+                if any(w <= rc for w in prior_writes):
+                    continue
+                findings.append(Finding(code, spec.name, name, what(ev)))
+                return
+
+    for i, _s in enumerate(spec.scratch):
+        name = f"scratch[{i}]"
+        read_before_init(
+            name, scratch_first, "LIVENESS_SCRATCH_UNINIT",
+            lambda ev, name=name: (
+                f"{name} is read (context {list(ev.ctx) or 'unconditional'}) "
+                "before any write guaranteed on the first reduce visit; "
+                "first-visit scratch contents are undefined on a real TPU — "
+                "initialize under ctx.when(ctx.is_first) / ctx.reduce_first"))
+
+    for t in spec.outputs:
+        firstset, lastset = _first_last_sets(spec, t)
+        evs = [ev for ev in events if ev.kind == "output" and ev.name == t.name]
+        if not evs:
+            continue  # never touched: the grid walk already flags UNWRITTEN
+        writes = [ev for ev in evs if ev.op == "write"]
+        has_init = any(_guaranteed(ev.ctx, firstset) for ev in writes)
+        has_flush = any(_guaranteed(ev.ctx, lastset) for ev in writes)
+        if writes and not (has_init or has_flush):
+            ctxs = sorted({str(list(ev.ctx)) for ev in writes})
+            findings.append(Finding(
+                "COVERAGE_SKIP_NO_INIT", spec.name, t.name,
+                f"output tile {t.name!r} is only written under skippable "
+                f"predicates ({', '.join(ctxs)}): a block whose guards all "
+                "skip is left undefined on a real TPU (zero-filled only on "
+                "jnp/loops). Add a guaranteed init (ctx.is_first / "
+                "ctx.reduce_first) or flush (ctx.is_last / ctx.reduce_last)"))
+        read_before_init(
+            t.name, firstset, "COVERAGE_SKIP_NO_INIT",
+            lambda ev, t=t: (
+                f"output tile {t.name!r} is read (context "
+                f"{list(ev.ctx) or 'unconditional'}) before any write "
+                "guaranteed on its block's first visit; first-visit output "
+                "contents are undefined on a real TPU — initialize under "
+                "ctx.reduce_first of an accumulated axis"))
+
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def analyze_spec(spec, defines=None, *, body=True) -> Report:
+    """Full analysis of one built Spec: grid invariants + semantics
+    consistency + (``body=True``) the recording body trace."""
+    findings, _ = check_grid_invariants(spec)
+    findings = list(findings)
+    findings += check_semantics(spec)
+    if body and not findings:
+        try:
+            events = trace_body(spec, defines)
+        except Exception as e:  # an exotic body the recorder cannot trace
+            findings.append(Finding(
+                "TRACE_INCOMPLETE", spec.name, "",
+                f"body trace failed ({type(e).__name__}: {e}); liveness/"
+                "coverage analysis skipped for this kernel"))
+        else:
+            findings += check_body(spec, events)
+    return Report(spec.name, findings)
+
+
+def check_built_spec(spec, defines=None, *, mode: str | None = None) -> Report:
+    """The kernel-build hook (``Device.build_kernel``): analyze + dispatch
+    per the strictness mode. Grid invariants already raised at Spec
+    construction, so this pass contributes the body/semantics verdicts."""
+    mode = analysis_mode() if mode is None else mode
+    if mode == "off":
+        return Report(spec.name, [])
+    findings = list(check_semantics(spec))
+    try:
+        events = trace_body(spec, defines)
+    except Exception as e:
+        findings.append(Finding(
+            "TRACE_INCOMPLETE", spec.name, "",
+            f"body trace failed ({type(e).__name__}: {e}); liveness/"
+            "coverage analysis skipped for this kernel"))
+    else:
+        findings += check_body(spec, events)
+    report = Report(spec.name, findings)
+    report.emit(mode)
+    return report

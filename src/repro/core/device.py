@@ -20,6 +20,7 @@ from typing import Callable
 
 import jax
 
+from . import analyze as _analyze
 from . import lang
 from .kernel import Kernel
 from .memory import Memory
@@ -122,7 +123,8 @@ class Device:
         return per_fn
 
     # -- run-time kernel compilation -------------------------------------------
-    def build_kernel(self, builder: Callable, defines: dict | None = None) -> Kernel:
+    def build_kernel(self, builder: Callable, defines: dict | None = None, *,
+                     analyze: str | None = None) -> Kernel:
         defines = dict(defines or {})
         # backend/interpret are set in __init__ but are public attributes: keep
         # them in the key so mutating them can't serve stale kernels.
@@ -137,6 +139,11 @@ class Device:
         spec = builder(D)
         if not isinstance(spec, lang.Spec):
             raise TypeError(f"builder {builder!r} must return lang.Spec, got {type(spec)}")
+        # the static analyzer gates every cache-miss build (grid invariants
+        # already ran in Spec.__post_init__; this adds the body-trace
+        # liveness/coverage pass). ``analyze`` overrides the process mode
+        # per build ($REPRO_ANALYZE / set_analysis_mode; "off" skips).
+        _analyze.check_built_spec(spec, D, mode=analyze)
         fn = lang.expand(spec, D, self.backend, interpret=self.interpret)
         kern = Kernel(self, spec, jax.jit(fn), defines)
 

@@ -218,6 +218,11 @@ class Spec:
     body: Callable
     reduce_axes: tuple[int, ...] = ()
     scratch: list[Scratch] = dataclasses.field(default_factory=list)
+    # Per-axis pallas pipelining override ("parallel" | "arbitrary" per grid
+    # axis). None derives the safe default: outer axes parallel, reduce axes
+    # arbitrary. The analyzer rejects a "parallel" reduce axis that carries
+    # scratch or an output accumulation (SEMANTICS_PARALLEL_CARRIED).
+    dimension_semantics: tuple[str, ...] | None = None
 
     def __post_init__(self):
         self.grid = tuple(int(g) for g in self.grid)
@@ -240,15 +245,19 @@ class Spec:
             if not isinstance(s, Scratch):
                 raise TypeError(f"scratch entries must be lang.Scratch, got {type(s)}")
 
-        # Surface non-dividing blocks AND out-of-range index maps at build
-        # time for ALL input tiles — autotune relies on invalid candidates
-        # failing inside build_kernel, not at the first (jitted) run. While
-        # walking the grid, also record which inputs' block index ignores the
-        # reduce ids: the jnp expansion hoists those slices out of the
-        # sequential reduce loop (e.g. flash-decode's q tile is sliced once
-        # per (b, h) cell, not once per kv block).
-        self._input_reduce_invariant = []
-        zero_r = (0,) * len(self.reduce_axes)
+        if self.dimension_semantics is not None:
+            sem = tuple(self.dimension_semantics)
+            if len(sem) != len(self.grid):
+                raise ValueError(
+                    f"dimension_semantics has {len(sem)} entries for a rank-"
+                    f"{len(self.grid)} grid")
+            bad = [s for s in sem if s not in ("parallel", "arbitrary")]
+            if bad:
+                raise ValueError(
+                    f"dimension_semantics entries must be 'parallel' or "
+                    f"'arbitrary', got {bad}")
+            self.dimension_semantics = sem
+
         for t in self.inputs:
             # stream=/reduce= are OUTPUT declarations (accumulation contracts);
             # on an input they would be silently ignored — reject at build
@@ -258,70 +267,22 @@ class Spec:
                 raise ValueError(
                     f"input tile {t.name!r}: stream=/reduce= are output-only "
                     "declarations (inputs are read at every visit)")
-            blk = t.resolved_block()
-            idx = t.resolved_index(self.grid)
-            nb = tuple(s // bb for s, bb in zip(t.shape, blk))
-            inv = True
-            bi0 = None
-            for cell in np.ndindex(*self.grid):
-                bi = tuple(int(i) for i in idx(*cell))
-                if len(bi) != len(nb) or any(
-                        not (0 <= i < n) for i, n in zip(bi, nb)):
-                    raise ValueError(
-                        f"input tile {t.name!r}: index map returned block "
-                        f"{bi} for grid cell {cell}, outside the {nb} block "
-                        f"grid (shape {t.shape}, block {blk})")
-                if inv and self.reduce_axes:
-                    # C-order walk: each outer group starts at reduce ids 0,
-                    # so that cell's bi IS the group's reference — one index-
-                    # map call per cell, not two
-                    if cell[k:] == zero_r:
-                        bi0 = bi
-                    elif bi != bi0:
-                        inv = False
-            self._input_reduce_invariant.append(inv)
 
-        # Per-output reduce granularity: an output accumulates over SOME of
-        # the reduce axes (all by default; none when streamed) and its index
-        # map may depend only on the REMAINING axes — the accumulate-then-
-        # flush contract needs a destination that is stable along exactly the
-        # accumulated axes. Distinct (outer x non-accumulated) cells must
-        # write distinct blocks, covering every block exactly once.
-        for t in self.outputs:
-            blk = t.resolved_block()
-            idx = t.resolved_index(self.grid)
-            nblocks = math.prod(s // b for s, b in zip(t.shape, blk))
-            slot_axes = self.output_slot_axes(t)
-            kind = "stream output" if t.stream else "output"
-            seen: dict[tuple, tuple] = {}
-            visited: set[tuple] = set()
-            for cell in np.ndindex(*self.grid):
-                bi = tuple(int(i) for i in idx(*cell))
-                key = cell[:k] + tuple(cell[a] for a in slot_axes)
-                if key in seen:
-                    if seen[key] != bi:
-                        raise ValueError(
-                            f"output tile {t.name!r}: index map depends on reduce "
-                            f"axes it accumulates over (cell {cell} -> {bi}, "
-                            f"expected {seen[key]}); exclude those axes via "
-                            "Tile(reduce=...) or stream=True")
-                else:
-                    if bi in visited:
-                        hint = ("streamed outputs must write a distinct block "
-                                "per grid cell" if t.stream else
-                                "grid-carried accumulation needs an explicit "
-                                "reduce axis (Spec(reduce_axes=...) + "
-                                "Tile(reduce=...)) — implicit revisits are "
-                                "rejected")
-                        raise ValueError(
-                            f"{kind} tile {t.name!r} block {bi} visited more "
-                            f"than once by distinct cells; {hint}")
-                    seen[key] = bi
-                    visited.add(bi)
-            if len(seen) != nblocks:
-                raise ValueError(
-                    f"{kind} tile {t.name!r}: {len(seen)} blocks visited but "
-                    f"{nblocks} exist; kernel would leave garbage")
+        # Concrete-grid invariants — non-dividing blocks, out-of-range index
+        # maps (inputs AND outputs), parallel-cell write races, accumulated-
+        # axis index dependence, unwritten blocks — are enforced at build
+        # time: autotune relies on invalid candidates failing inside
+        # build_kernel, not at the first (jitted) run. The enumeration lives
+        # in core.analyze (the static analyzer's grid pass); it also computes
+        # which inputs' block index ignores the reduce ids, so the jnp
+        # expansion can hoist those slices out of the sequential reduce loop
+        # (e.g. flash-decode's q tile is sliced once per (b, h) cell, not
+        # once per kv block).
+        from .analyze import AnalysisError, check_grid_invariants
+
+        findings, self._input_reduce_invariant = check_grid_invariants(self)
+        if findings:
+            raise AnalysisError(findings)
 
     # -- grid split helpers --------------------------------------------------
     @property
@@ -772,8 +733,11 @@ def _expand_pallas(spec: Spec, defines: SimpleNamespace, interpret: bool):
     # interpreter ignores compiler params, so only pass them when compiling.
     kwargs = {}
     if not interpret:
-        n_par = len(grid) - len(spec.reduce_axes)
-        sem = ("parallel",) * n_par + ("arbitrary",) * len(spec.reduce_axes)
+        if spec.dimension_semantics is not None:
+            sem = spec.dimension_semantics
+        else:
+            n_par = len(grid) - len(spec.reduce_axes)
+            sem = ("parallel",) * n_par + ("arbitrary",) * len(spec.reduce_axes)
         params_cls = getattr(pltpu, "CompilerParams", None) or \
             getattr(pltpu, "TPUCompilerParams", None)
         if params_cls is not None:

@@ -118,7 +118,8 @@ class Op:
     def __init__(self, name, builder, ref, derive_defines, *, vjp=None,
                  sweep=None, defaults=None, public_outputs=None,
                  early=None, pre=None, post=None, ref_params=(),
-                 tune_ref=None, example=None, doc=None, array_params=()):
+                 tune_ref=None, example=None, doc=None, array_params=(),
+                 analyze=None):
         self.name = name
         self.builder = builder
         self.ref = ref
@@ -131,6 +132,9 @@ class Op:
         self.ref_params = tuple(ref_params)
         self.tune_ref = tune_ref
         self.example = example
+        # per-op static-analysis strictness override (None = the process
+        # mode: $REPRO_ANALYZE / analyze.set_analysis_mode)
+        self.analyze = analyze
         self._early = early
         self._pre = pre
         self._post = post
@@ -176,7 +180,7 @@ class Op:
         """prepare -> build (Device kernel cache) -> run; ALL kernel outputs."""
         args, defines, _ = self._prepare(args, params)
         kern = default_device(backend, interpret).build_kernel(
-            self.builder, defines)
+            self.builder, defines, analyze=self.analyze)
         return kern.run(*args)
 
     def _publish(self, outs, args, params):
@@ -306,7 +310,8 @@ def define_op(name: str, *, builder: Callable, ref: Callable | None,
               pre: Callable | None = None, post: Callable | None = None,
               ref_params: Sequence[str] = (), tune_ref: Callable | None = None,
               example: Callable | None = None, doc: str | None = None,
-              array_params: Sequence[str] = (), register: bool = True) -> Op:
+              array_params: Sequence[str] = (), register: bool = True,
+              analyze: str | None = None) -> Op:
     """Declare a public op over the unified kernel language; see :class:`Op`.
 
     ``example(rng) -> (args, params)`` supplies representative inputs so the
@@ -318,7 +323,8 @@ def define_op(name: str, *, builder: Callable, ref: Callable | None,
     op = Op(name, builder, ref, derive_defines, vjp=vjp, sweep=sweep,
             defaults=defaults, public_outputs=public_outputs, early=early,
             pre=pre, post=post, ref_params=ref_params, tune_ref=tune_ref,
-            example=example, doc=doc, array_params=array_params)
+            example=example, doc=doc, array_params=array_params,
+            analyze=analyze)
     if register:
         # silent overwrites are the same collision class the PR-1 kernel-cache
         # fix eliminated: callers holding the first Op would diverge from the

@@ -23,7 +23,9 @@ def matmul_builder(D):
 
         @ctx.when(ctx.is_first)
         def _init():
-            acc[...] = jnp.zeros_like(acc[...])
+            # zeros from shape/dtype, not zeros_like(acc[...]): first-visit
+            # scratch contents are undefined, so the init must not read them
+            acc[...] = jnp.zeros(acc.shape, acc.dtype)
 
         acc[...] += jnp.dot(a[...], b[...], preferred_element_type=jnp.float32)
 

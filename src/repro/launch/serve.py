@@ -109,8 +109,14 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    from repro.core import ANALYZE_MODES, set_analysis_mode
+    ap.add_argument("--analyze", default=None, choices=ANALYZE_MODES,
+                    help="kernel static-analyzer strictness for every build "
+                         "this run performs (default: $REPRO_ANALYZE or error)")
     args = ap.parse_args(argv)
 
+    if args.analyze is not None:
+        set_analysis_mode(args.analyze)
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)

@@ -198,8 +198,14 @@ def main(argv=None):
     ap.add_argument("--fail-at", type=int, nargs="*", default=[])
     ap.add_argument("--data-axis", type=int, default=None)
     ap.add_argument("--model-axis", type=int, default=1)
+    from repro.core import ANALYZE_MODES, set_analysis_mode
+    ap.add_argument("--analyze", default=None, choices=ANALYZE_MODES,
+                    help="kernel static-analyzer strictness for every build "
+                         "this run performs (default: $REPRO_ANALYZE or error)")
     args = ap.parse_args(argv)
 
+    if args.analyze is not None:
+        set_analysis_mode(args.analyze)
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)

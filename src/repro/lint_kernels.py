@@ -1,0 +1,159 @@
+"""Registry-wide kernel lint — run the static analyzer over every op.
+
+Sweeps every registered ``define_op`` across its example shapes and its
+declared autotune sweep (the same candidate space ``op.tune`` explores), and
+analyzes every buildable candidate spec: grid invariants, scratch liveness,
+output coverage, dimension-semantics consistency (see
+:mod:`repro.core.analyze`). Ops whose families build extra kernels outside
+the registry (flash-attention's delta/bwd, the LM head's fused-CE backward)
+have those builders linted too, against the same defines.
+
+  PYTHONPATH=src python -m repro.lint_kernels            # verdict table
+  PYTHONPATH=src python -m repro.lint_kernels --strict   # any finding fails
+  PYTHONPATH=src python -m repro.lint_kernels --json artifacts/analyze.json
+
+Exit status: 0 when clean; 1 on any error-severity finding (any finding at
+all under ``--strict`` — what the CI ``analyze`` stage runs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+
+import numpy as np
+
+__all__ = ["lint_op", "main"]
+
+
+def _aux_builders(op_name: str) -> list:
+    """Kernel builders a family builds directly (no registry entry of their
+    own) — linted with the op's defines, which are a superset of theirs."""
+    if op_name == "flash_attention":
+        from repro.kernels.flash_attention.kernel import (
+            flash_bwd_builder, flash_delta_builder)
+        return [("flash_attention/delta", flash_delta_builder),
+                ("flash_attention/bwd", flash_bwd_builder)]
+    if op_name == "lm_head_ce":
+        from repro.kernels.lm_head.kernel import lm_head_bwd_builder
+        return [("lm_head_ce/bwd", lm_head_bwd_builder)]
+    return []
+
+
+def _candidates(op, defines: dict):
+    """The derived defines first, then every autotune sweep combination over
+    them — the exact candidate space a tuning run would build."""
+    yield dict(defines)
+    names = sorted(op.sweep)
+    for combo in itertools.product(*(op.sweep[n] for n in names)):
+        yield dict(defines, **dict(zip(names, combo)))
+
+
+def lint_op(op, rng=None) -> dict:
+    """Analyze one op across its example-shaped candidate sweep.
+
+    Returns ``{"checked", "skipped", "findings"}`` where findings are unique
+    dicts (code/spec/subject/message/severity). Invalid tilings (candidates
+    ``op.tune`` would skip) count as skipped, not findings."""
+    from repro.core import analyze_spec
+    from repro.core.analyze import AnalysisError
+    from repro.core.lang import defines_namespace
+
+    rng = rng or np.random.RandomState(0)
+    args, params = op.example(rng)
+    _, _, params = op._resolve(params)
+    run_args, defines, _ = op._prepare(tuple(args), params)
+
+    builders = [(op.name, op.builder)] + _aux_builders(op.name)
+    checked = skipped = 0
+    findings: dict[tuple, dict] = {}
+
+    def add(fs):
+        for f in fs:
+            key = (f.code, f.spec, f.subject, f.message)
+            findings[key] = dict(code=f.code, spec=f.spec, subject=f.subject,
+                                 severity=f.severity, message=f.message)
+
+    for cand in _candidates(op, defines):
+        D = defines_namespace(cand)
+        for _label, builder in builders:
+            try:
+                spec = builder(D)
+            except AnalysisError as e:
+                add(e.findings)
+                continue
+            except (ValueError, AssertionError):
+                skipped += 1  # invalid tiling for these shapes: tune skips it
+                continue
+            report = analyze_spec(spec, D)
+            add(report.findings)
+            checked += 1
+
+    return {"checked": checked, "skipped": skipped,
+            "findings": list(findings.values())}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--op", default=None,
+                    help="lint ONE op (default: the whole registry)")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail on ANY finding, coverage warnings included")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write machine-readable findings to PATH")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import repro.kernels  # noqa: F401 — registers the op families
+    from repro.core import registered_ops
+
+    ops = registered_ops()
+    if args.op is not None:
+        if args.op not in ops:
+            ap.error(f"unknown op {args.op!r}; known: {sorted(ops)}")
+        ops = {args.op: ops[args.op]}
+
+    results = {}
+    for name in sorted(ops):
+        results[name] = lint_op(ops[name], np.random.RandomState(args.seed))
+
+    n_err = sum(1 for r in results.values() for f in r["findings"]
+                if f["severity"] == "error")
+    n_all = sum(len(r["findings"]) for r in results.values())
+    ok = (n_all == 0) if args.strict else (n_err == 0)
+
+    w = max(len(n) for n in results) if results else 2
+    print(f"{'op':<{w}}  {'checked':>7}  {'skipped':>7}  {'findings':>8}  verdict")
+    for name, r in results.items():
+        nf = len(r["findings"])
+        bad = any(f["severity"] == "error" for f in r["findings"]) or \
+            (args.strict and nf)
+        verdict = "FAIL" if bad else ("WARN" if nf else "OK")
+        print(f"{name:<{w}}  {r['checked']:>7}  {r['skipped']:>7}  "
+              f"{nf:>8}  {verdict}")
+    for name, r in results.items():
+        for f in r["findings"]:
+            print(f"  {name}: [{f['code']}] {f['message']}")
+
+    if args.json:
+        payload = {"schema": 1, "strict": bool(args.strict), "ok": ok,
+                   "ops": results}
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+        print(f"[lint] wrote {args.json}")
+
+    print(f"[lint] {len(results)} ops, {n_all} findings "
+          f"({n_err} errors){' — STRICT' if args.strict else ''}: "
+          f"{'ok' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,6 +14,10 @@ free at warmup (``apply_tuned_winners`` — a pure cache lookup, zero builds).
 
   # what is tunable
   PYTHONPATH=src python -m repro.tune_cli --list
+
+  # audit persisted winners: ops gone from the registry, or defines that now
+  # fail the kernel static analyzer (repro.core.analyze); --evict drops them
+  PYTHONPATH=src python -m repro.tune_cli --lint [--evict]
 """
 
 from __future__ import annotations
@@ -48,11 +52,74 @@ def _tune_probe(op, args, params, *, backend, repeats, cache):
     return winner
 
 
+def _lint_cache(ops, *, evict: bool) -> int:
+    """Audit every persisted autotune winner under ``$REPRO_CACHE_DIR``:
+    flag entries whose op left the registry, whose stored defines no longer
+    parse/build, or whose winner defines now fail the static analyzer.
+    ``evict=True`` deletes flagged entries. Returns a process exit code
+    (1 when problems remain on disk)."""
+    import ast
+    import json
+
+    from repro.core import analyze_spec, tune_cache_dir
+    from repro.core.analyze import AnalysisError
+    from repro.core.lang import defines_namespace
+
+    root = tune_cache_dir() / "autotune"
+    entries = sorted(root.glob("*.json")) if root.is_dir() else []
+    bad = 0
+    for path in entries:
+        try:
+            entry = json.loads(path.read_text())
+        except (OSError, ValueError):
+            entry, problem = {}, "corrupt JSON"
+        else:
+            problem = None
+        name = entry.get("op", "?")
+        op = ops.get(name)
+        if problem is None and op is None:
+            problem = "op no longer registered"
+        if problem is None:
+            try:
+                # base defines are persisted as reprs (the cache-key payload);
+                # the winner holds the swept keys as real JSON values
+                defines = {k: ast.literal_eval(v)
+                           for k, v in entry.get("defines", {}).items()}
+                cand = dict(defines, **entry.get("winner", {}))
+                spec = op.builder(defines_namespace(cand))
+                findings = analyze_spec(spec, defines_namespace(cand)).findings
+                if findings:
+                    problem = "; ".join(str(f) for f in findings)
+            except AnalysisError as e:
+                problem = str(e)
+            except Exception as e:
+                problem = f"winner no longer builds ({type(e).__name__}: {e})"
+        if problem is None:
+            continue
+        bad += 1
+        action = "evicting" if evict else "stale"
+        print(f"[lint] {action} {path.name} (op {name!r}): {problem}")
+        if evict:
+            try:
+                path.unlink()
+            except OSError:
+                pass
+    print(f"[lint] {len(entries)} cached winners, {bad} stale"
+          f"{' (evicted)' if evict and bad else ''}"
+          f"{'; re-run with --evict to drop them' if bad and not evict else ''}")
+    return 0 if (bad == 0 or evict) else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--list", action="store_true",
                     help="list registered ops and their tuning sweeps")
+    ap.add_argument("--lint", action="store_true",
+                    help="audit persisted winners against the registry and "
+                         "the kernel static analyzer")
+    ap.add_argument("--evict", action="store_true",
+                    help="with --lint: delete the flagged cache entries")
     ap.add_argument("--op", default=None,
                     help="tune ONE op on its declared example shapes")
     ap.add_argument("--arch", default=None,
@@ -77,6 +144,10 @@ def main(argv=None):
     from repro.core import registered_ops
 
     ops = registered_ops()
+    if args.lint:
+        return _lint_cache(ops, evict=args.evict)
+    if args.evict:
+        ap.error("--evict only makes sense with --lint")
     if args.list:
         for name in sorted(ops):
             op = ops[name]

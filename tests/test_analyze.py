@@ -1,0 +1,345 @@
+"""The kernel static analyzer (repro.core.analyze).
+
+Five deliberately-broken specs — one per finding class — must each be
+rejected with its distinct finding code on every backend's build path, and
+the entire shipped registry (including the directly-built flash/lm-head
+backward kernels) must produce ZERO findings: the analyzer is only useful
+if it is precise enough to gate every real build.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (BACKENDS, AnalysisError, AnalysisWarning, Device,
+                        Scratch, Spec, Tile, analysis_mode, analyze_spec,
+                        set_analysis_mode)
+from repro.core.lang import defines_namespace
+
+
+def _build_all_backends(builder, defines, **kw):
+    """Build on every backend expansion; returns the per-backend exception."""
+    errs = {}
+    for be in BACKENDS:
+        with pytest.raises(AnalysisError) as ei:
+            Device(be).build_kernel(builder, defines, **kw)
+        errs[be] = ei.value
+    return errs
+
+
+def _codes(err):
+    return {f.code for f in err.findings}
+
+
+# ---------------------------------------------------------------------------
+# the five seeded bad specs, one distinct finding code each
+# ---------------------------------------------------------------------------
+
+def test_parallel_axis_race_rejected():
+    """Two cells of a parallel (outer) axis map to one output block."""
+
+    def bad(D):
+        def body(ctx, x, y):
+            y[...] = x[...]
+
+        return Spec("race", grid=(4,),
+                    inputs=[Tile("x", (16,), jnp.float32, block=(4,))],
+                    outputs=[Tile("y", (16,), jnp.float32, block=(4,),
+                                  index=lambda i: (i // 2,))],
+                    body=body)
+
+    for err in _build_all_backends(bad, {}).values():
+        assert _codes(err) == {"RACE_PARALLEL_WRITE"}
+        assert "visited more than once" in str(err)
+
+
+def test_unwritten_block_rejected():
+    """Half the output's blocks are never visited by any grid cell."""
+
+    def bad(D):
+        def body(ctx, x, y):
+            y[...] = x[...]
+
+        return Spec("holes", grid=(2,),
+                    inputs=[Tile("x", (16,), jnp.float32, block=(4,),
+                                 index=lambda i: (i,))],
+                    outputs=[Tile("y", (16,), jnp.float32, block=(4,),
+                                  index=lambda i: (i,))],
+                    body=body)
+
+    for err in _build_all_backends(bad, {}).values():
+        assert _codes(err) == {"COVERAGE_UNWRITTEN"}
+        assert "leave garbage" in str(err)
+
+
+def test_scratch_read_before_init_rejected():
+    """Accumulating scratch with no first-visit init: reads undefined VMEM."""
+
+    def bad(D):
+        def body(ctx, x, out):
+            acc, = ctx.scratch
+            acc[...] += jnp.sum(x[...], keepdims=True)  # no is_first init
+
+            @ctx.when(ctx.is_last)
+            def _flush():
+                out[...] = acc[...]
+
+        return Spec("noinit", grid=(4,), reduce_axes=(0,),
+                    scratch=[Scratch((1,), jnp.float32)],
+                    inputs=[Tile("x", (16,), jnp.float32, block=(4,),
+                                 index=lambda r: (r,))],
+                    outputs=[Tile("out", (1,), jnp.float32, block=(1,),
+                                  index=lambda r: (0,))],
+                    body=body)
+
+    for err in _build_all_backends(bad, {}).values():
+        assert _codes(err) == {"LIVENESS_SCRATCH_UNINIT"}
+
+
+def test_skippable_write_without_init_rejected_strict():
+    """An output written ONLY under a grid-dependent cell_when: blocks whose
+    guard skips are left undefined on a real TPU (PR 3's dk/dv hazard)."""
+
+    def bad(D):
+        def body(ctx, x, y):
+            @ctx.cell_when(ctx.outer_id(0) % 2 == 0)
+            def _maybe():
+                y[...] = x[...] * 2.0
+
+        return Spec("skippy", grid=(4,),
+                    inputs=[Tile("x", (16,), jnp.float32, block=(4,))],
+                    outputs=[Tile("y", (16,), jnp.float32, block=(4,))],
+                    body=body)
+
+    for err in _build_all_backends(bad, {}, analyze="strict").values():
+        assert _codes(err) == {"COVERAGE_SKIP_NO_INIT"}
+    # coverage findings are the warn-by-default class: the default mode
+    # surfaces them as AnalysisWarning, not a build failure
+    with pytest.warns(AnalysisWarning, match="COVERAGE_SKIP_NO_INIT"):
+        Device("jnp").build_kernel(bad, {})
+
+
+def test_parallel_reduce_axis_with_carried_state_rejected():
+    """dimension_semantics marks the reduce axis "parallel" while scratch
+    carries the accumulation along it — the pipeline could reorder visits."""
+
+    def bad(D):
+        def body(ctx, x, out):
+            acc, = ctx.scratch
+
+            @ctx.when(ctx.is_first)
+            def _init():
+                acc[...] = jnp.zeros(acc.shape, acc.dtype)
+
+            acc[...] += jnp.sum(x[...], keepdims=True)
+
+            @ctx.when(ctx.is_last)
+            def _flush():
+                out[...] = acc[...]
+
+        return Spec("badsem", grid=(4,), reduce_axes=(0,),
+                    dimension_semantics=("parallel",),
+                    scratch=[Scratch((1,), jnp.float32)],
+                    inputs=[Tile("x", (16,), jnp.float32, block=(4,),
+                                 index=lambda r: (r,))],
+                    outputs=[Tile("out", (1,), jnp.float32, block=(1,),
+                                  index=lambda r: (0,))],
+                    body=body)
+
+    for err in _build_all_backends(bad, {}).values():
+        assert _codes(err) == {"SEMANTICS_PARALLEL_CARRIED"}
+
+
+# ---------------------------------------------------------------------------
+# index-map bounds: offending cell AND axis in the message (inputs + outputs)
+# ---------------------------------------------------------------------------
+
+def test_output_index_out_of_bounds_reports_cell_and_axis():
+    def bad(D):
+        def body(ctx, x, y):
+            y[...] = x[...]
+
+        return Spec("oob", grid=(4,),
+                    inputs=[Tile("x", (16,), jnp.float32, block=(4,))],
+                    outputs=[Tile("y", (16,), jnp.float32, block=(4,),
+                                  index=lambda i: (i + 1,))],
+                    body=body)
+
+    with pytest.raises(AnalysisError) as ei:
+        Device("jnp").build_kernel(bad, {})
+    assert _codes(ei.value) == {"BOUNDS_INDEX"}
+    msg = str(ei.value)
+    assert "cell (3,)" in msg and "axis 0" in msg and "block index 4" in msg
+
+
+def test_input_index_out_of_bounds_reports_cell_and_axis():
+    def bad(D):
+        def body(ctx, x, y):
+            y[...] = x[...]
+
+        return Spec("oob_in", grid=(2, 2),
+                    inputs=[Tile("x", (8, 8), jnp.float32, block=(4, 4),
+                                 index=lambda i, j: (i, j + 2))],
+                    outputs=[Tile("y", (8, 8), jnp.float32, block=(4, 4))],
+                    body=body)
+
+    with pytest.raises(AnalysisError) as ei:
+        Device("jnp").build_kernel(bad, {})
+    assert _codes(ei.value) == {"BOUNDS_INDEX"}
+    msg = str(ei.value)
+    assert "cell (0, 0)" in msg and "axis 1" in msg
+
+
+def test_scratch_shape_validated():
+    def bad(D):
+        def body(ctx, x, y):
+            y[...] = x[...]
+
+        return Spec("scr0", grid=(4,),
+                    scratch=[Scratch((0,), jnp.float32)],
+                    inputs=[Tile("x", (16,), jnp.float32, block=(4,))],
+                    outputs=[Tile("y", (16,), jnp.float32, block=(4,))],
+                    body=body)
+
+    with pytest.raises(AnalysisError) as ei:
+        Device("jnp").build_kernel(bad, {})
+    assert _codes(ei.value) == {"BOUNDS_SCRATCH"}
+
+
+# ---------------------------------------------------------------------------
+# strictness knob
+# ---------------------------------------------------------------------------
+
+def _noinit_builder(D):
+    def body(ctx, x, out):
+        acc, = ctx.scratch
+        acc[...] += jnp.sum(x[...], keepdims=True)
+
+        @ctx.when(ctx.is_last)
+        def _flush():
+            out[...] = acc[...]
+
+    return Spec("noinit_knob", grid=(4,), reduce_axes=(0,),
+                scratch=[Scratch((1,), jnp.float32)],
+                inputs=[Tile("x", (16,), jnp.float32, block=(4,),
+                             index=lambda r: (r,))],
+                outputs=[Tile("out", (1,), jnp.float32, block=(1,),
+                              index=lambda r: (0,))],
+                body=body)
+
+
+def test_analyze_off_skips_body_analysis():
+    kern = Device("jnp").build_kernel(_noinit_builder, {}, analyze="off")
+    assert kern is not None  # zero-filled jnp expansion still runs
+
+
+def test_analyze_warn_mode_downgrades_errors():
+    with pytest.warns(AnalysisWarning, match="LIVENESS_SCRATCH_UNINIT"):
+        Device("loops").build_kernel(_noinit_builder, {}, analyze="warn")
+
+
+def test_set_analysis_mode_round_trips(monkeypatch):
+    assert analysis_mode() == "error"  # the default
+    prev = set_analysis_mode("strict")
+    try:
+        assert analysis_mode() == "strict"
+    finally:
+        set_analysis_mode(prev)
+    monkeypatch.setenv("REPRO_ANALYZE", "warn")
+    assert analysis_mode() == "warn"
+    monkeypatch.setenv("REPRO_ANALYZE", "bogus")
+    with pytest.raises(ValueError, match="bogus"):
+        analysis_mode()
+    with pytest.raises(ValueError, match="analyze mode"):
+        set_analysis_mode("bogus")
+
+
+def test_dimension_semantics_validated():
+    def bad(D):
+        def body(ctx, x, y):
+            y[...] = x[...]
+
+        return Spec("sem_len", grid=(4,), dimension_semantics=("parallel",) * 2,
+                    inputs=[Tile("x", (16,), jnp.float32, block=(4,))],
+                    outputs=[Tile("y", (16,), jnp.float32, block=(4,))],
+                    body=body)
+
+    with pytest.raises(ValueError, match="dimension_semantics"):
+        Device("jnp").build_kernel(bad, {})
+
+
+# ---------------------------------------------------------------------------
+# nested when/cell_when: predicates must compose (AND) on every expansion
+# ---------------------------------------------------------------------------
+
+def test_nested_when_inside_cell_when_agrees_across_backends():
+    """A when nested under a cell_when runs iff BOTH predicates hold — the
+    analyzer traces both guards; this pins the run-time composition too."""
+
+    def builder(D):
+        def body(ctx, x, y):
+            y[...] = x[...]  # guaranteed init: skipped cells keep x
+
+            @ctx.cell_when(ctx.outer_id(0) % 2 == 0)
+            def _even_cells():
+                @ctx.when(x[0] > 0.0)
+                def _positive_lead():
+                    y[...] = x[...] * 2.0
+
+        return Spec("nested", grid=(4,),
+                    inputs=[Tile("x", (16,), jnp.float32, block=(4,))],
+                    outputs=[Tile("y", (16,), jnp.float32, block=(4,))],
+                    body=body)
+
+    x = np.asarray([1, 2, 3, 4, -1, -2, -3, -4,
+                    5, 6, 7, 8, -5, -6, -7, -8], np.float32)
+    want = x.copy()
+    for i in range(4):
+        blk = x[4 * i: 4 * i + 4]
+        if i % 2 == 0 and blk[0] > 0:
+            want[4 * i: 4 * i + 4] = blk * 2
+    outs = {}
+    for be in BACKENDS:
+        k = Device(be).build_kernel(builder, {})
+        outs[be] = np.asarray(k.run(jnp.asarray(x))[0])
+        np.testing.assert_array_equal(outs[be], want,
+                                      err_msg=f"backend {be} diverged")
+    # and exact cross-backend agreement (not just tolerance-close)
+    np.testing.assert_array_equal(outs["jnp"], outs["loops"])
+    np.testing.assert_array_equal(outs["jnp"], outs["pallas"])
+
+
+# ---------------------------------------------------------------------------
+# zero false positives: the whole shipped registry must analyze clean
+# ---------------------------------------------------------------------------
+
+def test_registry_sweeps_clean():
+    """Every registered op (and the directly-built flash/lm-head backward
+    kernels), across its full autotune candidate sweep: zero findings."""
+    import repro.kernels  # noqa: F401 — registers the op families
+    from repro.core import registered_ops
+    from repro.lint_kernels import lint_op
+
+    ops = registered_ops()
+    assert ops, "registry is empty?"
+    for name in sorted(ops):
+        result = lint_op(ops[name], np.random.RandomState(0))
+        assert result["checked"] > 0, f"{name}: nothing analyzed"
+        assert result["findings"] == [], (
+            f"{name}: analyzer false positives {result['findings']}")
+
+
+def test_analyze_spec_reports_without_raising():
+    """analyze_spec is the non-throwing surface lint/tooling consume."""
+
+    def good(D):
+        def body(ctx, x, y):
+            y[...] = x[...]
+
+        return Spec("idty", grid=(4,),
+                    inputs=[Tile("x", (16,), jnp.float32, block=(4,))],
+                    outputs=[Tile("y", (16,), jnp.float32, block=(4,))],
+                    body=body)
+
+    report = analyze_spec(good(defines_namespace({})), defines_namespace({}))
+    assert report.ok and report.errors == []

@@ -80,7 +80,7 @@ def test_matmul_noncanonical_output_index():
 
             @ctx.when(ctx.is_first)
             def _init():
-                acc[...] = jnp.zeros_like(acc[...])
+                acc[...] = jnp.zeros(acc.shape, acc.dtype)
 
             acc[...] += jnp.dot(a[...], b[...], preferred_element_type=jnp.float32)
 
@@ -121,7 +121,7 @@ def test_matmul_accumulates_directly_into_output():
         def body(ctx, a, b, c):
             @ctx.when(ctx.is_first)
             def _init():
-                c[...] = jnp.zeros_like(c[...])
+                c[...] = jnp.zeros(c.shape, c.dtype)
 
             c[...] += jnp.dot(a[...], b[...], preferred_element_type=jnp.float32)
 
@@ -154,7 +154,7 @@ def test_full_reduction_single_output_block():
 
             @ctx.when(ctx.is_first)
             def _init():
-                acc[...] = jnp.zeros_like(acc[...])
+                acc[...] = jnp.zeros(acc.shape, acc.dtype)
 
             acc[...] += jnp.sum(x[...], keepdims=True)
 
@@ -187,7 +187,7 @@ def test_reduce_id_and_dims_exposed():
 
             @ctx.when(ctx.is_first)
             def _init():
-                acc[...] = jnp.zeros_like(acc[...])
+                acc[...] = jnp.zeros(acc.shape, acc.dtype)
 
             # weight each reduce step by its position: sum_r r * block_sum_r
             acc[...] += ctx.reduce_id(0).astype(jnp.float32) * jnp.sum(
