@@ -63,14 +63,14 @@ def model_flops(rec) -> float:
 
 def analyze(rec) -> dict:
     ex = rec["extrapolated"]
-    chips = rec["chips"]
-    t_c = ex["flops"] / PEAK_FLOPS
-    t_m = ex["bytes_accessed"] / HBM_BW
-    t_x = ex["collective_total_bytes"] / LINK_BW
+    chips = rec["chips"] or 1      # a zero-chip record must not divide-crash
+    t_c = ex.get("flops", 0.0) / PEAK_FLOPS
+    t_m = ex.get("bytes_accessed", 0.0) / HBM_BW
+    t_x = ex.get("collective_total_bytes", 0.0) / LINK_BW
     terms = {"compute": t_c, "memory": t_m, "collective": t_x}
     dominant = max(terms, key=terms.get)
     mf = model_flops(rec) / chips
-    ratio = mf / ex["flops"] if ex["flops"] else 0.0
+    ratio = mf / ex["flops"] if ex.get("flops") else 0.0
     # roofline fraction: useful work at peak vs the time the dominant term costs
     t_dom = terms[dominant]
     frac = (mf / PEAK_FLOPS) / t_dom if t_dom else 0.0
@@ -96,25 +96,38 @@ def _note(rec, dominant, ratio, terms) -> str:
             "all-gather), shard activations along seq, overlap with compute")
 
 
-def load(dirpath: str, tag: str = "") -> list[dict]:
-    recs = []
+def _load_records(dirpath: str):
+    """Every parseable dict record under ``dirpath`` — a missing dir yields
+    nothing and corrupt/shapeless JSON files are skipped with a note instead
+    of crashing the report (artifacts come from interrupted dry-runs too)."""
     for fn in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
-        with open(fn) as f:
-            r = json.load(f)
-        if r.get("tag", "") != tag or r.get("component"):
+        try:
+            with open(fn) as f:
+                r = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"[roofline] skipping unreadable {fn}: {e}")
             continue
-        recs.append(r)
-    return recs
+        if not isinstance(r, dict):
+            print(f"[roofline] skipping {fn}: not a JSON object")
+            continue
+        yield r
+
+
+def load(dirpath: str, tag: str = "") -> list[dict]:
+    return [r for r in _load_records(dirpath)
+            if r.get("tag", "") == tag and not r.get("component")]
 
 
 def load_components(dirpath: str, tag: str = "") -> dict:
     comps = {}
-    for fn in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
-        with open(fn) as f:
-            r = json.load(f)
+    for r in _load_records(dirpath):
         if not r.get("component") or r.get("tag", "") != tag:
             continue
-        comps.setdefault((r["arch"], r["shape"], r["mesh"]), []).append(r)
+        try:
+            key = (r["arch"], r["shape"], r["mesh"])
+        except KeyError:
+            continue
+        comps.setdefault(key, []).append(r)
     return comps
 
 
@@ -144,28 +157,102 @@ def flash_adjust(rec: dict, comps) -> dict:
     return out
 
 
-def markdown_table(recs) -> str:
+def static_attention_check(comp) -> str | None:
+    """Cross-check the unified flash kernel's STATIC cost-model estimate
+    (``repro.core.estimate_cost`` on the very spec the op would build at
+    this cell's shapes) against the component dry-run's measured terms:
+    ``static_flops / ref_flops`` and ``static_bytes / ref_bytes``, per chip.
+    Ratios well under 1 are the headroom the kernel path should buy; None
+    when the record is not a usable attention component."""
+    if comp.get("component") != "attention" or comp.get("skipped") \
+            or not comp.get("ref_flops") or not comp.get("ref_bytes"):
+        return None
+    try:
+        import jax
+        import jax.numpy as jnp
+        from types import SimpleNamespace
+
+        import repro.kernels  # noqa: F401 — registers the op families
+        from repro.configs import SHAPES, get_config
+        from repro.core import estimate_cost, registered_ops
+
+        cfg = get_config(comp["arch"])
+        shape = SHAPES[comp["shape"]]
+        h, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        if cfg.attn_type == "mla":
+            hk, hd = h, cfg.qk_nope_dim + cfg.qk_rope_dim
+        b, s = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        decode = shape.kind == "decode"
+        skv = min(s, cfg.window) if cfg.window else s
+        probe = jax.ShapeDtypeStruct
+        if decode:
+            op = registered_ops()["flash_decode"]
+            args = (probe((b, h, 1, hd), dt), probe((b, hk, skv, hd), dt),
+                    probe((b, hk, skv, hd), dt))
+            params = dict(window=cfg.window)
+        else:
+            op = registered_ops()["flash_attention"]
+            args = (probe((b, h, s, hd), dt), probe((b, hk, s, hd), dt),
+                    probe((b, hk, s, hd), dt))
+            params = dict(causal=True, window=cfg.window)
+        _, _, params = op._resolve(params)
+        _, defines, _ = op._prepare(args, params)
+        rep = estimate_cost(op.builder(SimpleNamespace(**defines)),
+                            SimpleNamespace(**defines))
+        if rep.flops is None:
+            return None
+        # the dry-run's train chain measures fwd+bwd(+recompute); the static
+        # spec is the forward — scale by the same factors dryrun uses
+        f_flops, f_bytes = (3.5, 3.0) if shape.kind == "train" else (1.0, 1.0)
+        chips = comp.get("chips") or 1
+        fr = (rep.flops * f_flops / chips) / comp["ref_flops"]
+        br = (rep.hbm_bytes * f_bytes / chips) / comp["ref_bytes"]
+        return f"static/HLO fl {fr:.2f}x B {br:.2f}x"
+    except Exception as e:
+        return f"static check failed ({type(e).__name__})"
+
+
+def markdown_table(recs, comps=None) -> str:
     lines = [
         "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
-        "| dominant | 6ND/HLO | roofline frac | bottleneck note |",
-        "|---|---|---|---|---|---|---|---|---|---|",
+        "| dominant | 6ND/HLO | roofline frac | static check "
+        "| bottleneck note |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in recs:
+        try:
+            key = (r["arch"], r["shape"], r["mesh"])
+        except KeyError:
+            lines.append(f"| ? | ? | ? | — | — | — | — | — | — | — "
+                         f"| malformed record (missing arch/shape/mesh) |")
+            continue
+        cell3 = f"| {r['arch']} | {r['shape']} | {r['mesh']}"
         if r.get("skipped"):
-            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
-                         f"| — | — | — | — | {r['reason']} |")
+            lines.append(f"{cell3} | — | — | — | — | — | — | — "
+                         f"| {r.get('reason', 'skipped')} |")
             continue
         if "error" in r:
-            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERR "
-                         f"| | | | | | {r['error'][:80]} |")
+            lines.append(f"{cell3} | ERR | | | | | | | {r['error'][:80]} |")
             continue
-        a = analyze(r)
+        static = "—"
+        for comp in (comps or {}).get(key, []):
+            note = static_attention_check(comp)
+            if note:
+                static = note
+                break
+        try:
+            a = analyze(r)
+        except Exception as e:
+            lines.append(f"{cell3} | ERR | | | | | | {static} "
+                         f"| malformed record ({type(e).__name__}: {e}) |")
+            continue
         t = a["terms"]
         lines.append(
-            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"{cell3} "
             f"| {t['compute']:.3e} | {t['memory']:.3e} | {t['collective']:.3e} "
             f"| **{a['dominant']}** | {a['useful_ratio']:.2f} "
-            f"| {a['roofline_fraction']:.2f} | {a['note']} |")
+            f"| {a['roofline_fraction']:.2f} | {static} | {a['note']} |")
     return "\n".join(lines)
 
 
@@ -180,18 +267,21 @@ def main(argv=None):
     args = ap.parse_args(argv)
     recs = load(args.dir, args.tag)
     if not recs:
-        print(f"[roofline] no artifacts under {args.dir}")
+        print(f"[roofline] no dry-run artifacts under {args.dir!r} — run "
+              "`python -m benchmarks.dryrun` first (or pass --dir)")
         return 1
+    comps = load_components(args.dir)
     if args.flash_adjust:
-        comps = load_components(args.dir)
         recs = [flash_adjust(r, comps[(r["arch"], r["shape"], r["mesh"])])
                 if (r["arch"], r["shape"], r["mesh"]) in comps
                 and not r.get("skipped") and "error" not in r else r
                 for r in recs]
-    md = markdown_table(recs)
+    md = markdown_table(recs, comps)
     print(md)
     if args.markdown:
-        os.makedirs(os.path.dirname(args.markdown), exist_ok=True)
+        d = os.path.dirname(args.markdown)
+        if d:
+            os.makedirs(d, exist_ok=True)
         with open(args.markdown, "w") as f:
             f.write(md + "\n")
     return 0

@@ -12,6 +12,29 @@ from . import attention, dg, fd, sem, unified
 from .common import Row, check_manifest, emit, write_json
 
 
+def _cost_rows(rows):
+    """One static-cost-model row per registered op (default derived config):
+    us column is 0 (nothing is timed), derived carries the footprint/traffic
+    summary the CI smoke manifest pins."""
+    import numpy as np
+
+    import repro.kernels  # noqa: F401 — registers the op families
+    from repro.core import registered_ops
+    from repro.lint_kernels import cost_op
+
+    for name, op in sorted(registered_ops().items()):
+        c = cost_op(op, np.random.RandomState(0))
+        k = c["kernels"][0]
+        fl = "?" if k["flops"] is None else str(k["flops"])
+        rows.append(Row(
+            f"cost/{name}", 0.0,
+            f"vmem={k['vmem_bytes']}B ({k['vmem_frac']:.0%} budget); "
+            f"hbm={k['hbm_bytes']}B; flops={fl}; "
+            f"pruned={len(c['sweep_pruned'])}/"
+            f"{len(c['sweep_pruned']) + c['sweep_kept']}"))
+    return rows
+
+
 def _roofline_rows(rows):
     from . import roofline
     recs = roofline.load("artifacts/dryrun")
@@ -50,6 +73,10 @@ def main(argv=None) -> None:
     dg.run(rows, smoke=args.smoke)
     attention.run(rows, smoke=args.smoke)
     unified.run(rows, smoke=args.smoke)
+    try:
+        _cost_rows(rows)
+    except Exception as e:
+        rows.append(Row("cost/unavailable", 0.0, str(e)[:60]))
     try:
         _roofline_rows(rows)
     except Exception as e:  # artifacts may not exist yet

@@ -254,6 +254,31 @@ def main():
             raise AssertionError(f"{bad.__name__} should have been rejected")
     # the same checks sweep the whole registry: python -m repro.lint_kernels
 
+    # 11. STATIC COST MODEL: the same spec is priced before it ever runs —
+    #     per-cell VMEM footprint against the $REPRO_VMEM_BUDGET budget
+    #     (EVERY build enforces it: an overflowing spec is a build error,
+    #     on all three backends), HBM bytes from one walk of the concrete
+    #     grid (consecutive repeats of a block index fetch once, like the
+    #     pallas pipeline), and FLOPs from the abstract body trace. Autotune
+    #     runs it first and PRUNES candidates that overflow VMEM or are
+    #     dominated (>= bytes AND >= flops) before building or timing them.
+    from types import SimpleNamespace
+
+    from repro.core import estimate_cost, prune_candidates
+    from repro.kernels.matmul import matmul_builder
+
+    D = dict(M=64, K=64, N=64, bm=32, bk=32, bn=32, dtype="float32")
+    rep = estimate_cost(matmul_builder(SimpleNamespace(**D)),
+                        SimpleNamespace(**D))
+    print(f"matmul 64^3 @ 32^3 blocks: vmem {rep.vmem_bytes} B "
+          f"({rep.vmem_frac:.1%} of budget), hbm {rep.hbm_bytes} B, "
+          f"{rep.flops} flops, {rep.intensity:.2f} flop/B")
+    kept, pruned = prune_candidates(
+        matmul_builder, D, dict(bm=[32, 64], bn=[32, 64], bk=[32, 64]))
+    print(f"sweep 2x2x2: {len(kept)} kept, {len(pruned)} pruned statically "
+          "— autotune never builds them (registry-wide: "
+          "python -m repro.lint_kernels --cost)")
+
     print("one declaration -> every backend, tuned, differentiable, "
           "statically verified, identical results")
 

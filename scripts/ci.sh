@@ -8,8 +8,10 @@
 #            pallas_call` counts too) and no jax.experimental.pallas import
 #            outside src/repro/core/
 #   analyze  the kernel static analyzer (python -m repro.lint_kernels
-#            --strict) over every registered op + its autotune sweep;
-#            findings also land as JSON in artifacts/analyze.json
+#            --strict --cost) over every registered op + its autotune sweep,
+#            including the static cost model (VMEM budget, bytes/FLOPs);
+#            findings land as JSON in artifacts/analyze.json and the cost
+#            table in artifacts/cost.json
 #   tests    the tier-1 suite (extra args after the stage selector are
 #            forwarded to pytest)
 #   matrix   backend matrix: the cross-backend agreement suites re-run under
@@ -73,7 +75,10 @@ stage_guards() {
 
 stage_analyze() {
     mkdir -p artifacts
-    python -m repro.lint_kernels --strict --json artifacts/analyze.json
+    # --cost folds the static cost model into the strict verdict: a default
+    # config tripping VMEM_OVERFLOW (or any other finding) fails the stage.
+    python -m repro.lint_kernels --strict --cost \
+        --json artifacts/analyze.json --cost-json artifacts/cost.json
 }
 
 stage_tests() {

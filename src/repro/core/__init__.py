@@ -6,14 +6,16 @@ adapted to JAX/TPU. See DESIGN.md §2 for the keyword-by-keyword mapping.
 """
 
 from .lang import BACKENDS, Ctx, Scratch, Spec, Tile, TileRef, cdiv, expand
-from .analyze import (ANALYZE_MODES, AnalysisError, AnalysisWarning, Finding,
-                      Report, analysis_mode, analyze_spec, set_analysis_mode)
+from .analyze import (ANALYZE_MODES, AnalysisError, AnalysisWarning,
+                      CostReport, Finding, Report, analysis_mode,
+                      analyze_spec, estimate_cost, estimate_flops,
+                      set_analysis_mode, vmem_budget, vmem_footprint)
 from .device import Device, BuildStats, default_device, fit_block
 from .kernel import Kernel
 from .memory import Memory
 from .op import Op, OpVJP, define_op, get_op, oracle_vjp, registered_ops
 from .tune import (SCHEMA_VERSION, TuneResult, autotune, cached_winner,
-                   tune_cache_dir, tune_cache_key)
+                   prune_candidates, tune_cache_dir, tune_cache_key)
 
 __all__ = [
     "ANALYZE_MODES",
@@ -21,6 +23,7 @@ __all__ = [
     "AnalysisWarning",
     "BACKENDS",
     "BuildStats",
+    "CostReport",
     "Ctx",
     "Device",
     "Finding",
@@ -42,12 +45,17 @@ __all__ = [
     "cdiv",
     "default_device",
     "define_op",
+    "estimate_cost",
+    "estimate_flops",
     "expand",
     "fit_block",
     "get_op",
     "oracle_vjp",
+    "prune_candidates",
     "registered_ops",
     "set_analysis_mode",
     "tune_cache_dir",
     "tune_cache_key",
+    "vmem_budget",
+    "vmem_footprint",
 ]

@@ -77,6 +77,8 @@ __all__ = [
     "ANALYZE_MODES",
     "AnalysisError",
     "AnalysisWarning",
+    "CostReport",
+    "DEFAULT_VMEM_BUDGET",
     "Finding",
     "Report",
     "analysis_mode",
@@ -85,8 +87,12 @@ __all__ = [
     "check_built_spec",
     "check_grid_invariants",
     "check_semantics",
+    "estimate_cost",
+    "estimate_flops",
     "set_analysis_mode",
     "trace_body",
+    "vmem_budget",
+    "vmem_footprint",
 ]
 
 ANALYZE_MODES = ("off", "warn", "error", "strict")
@@ -104,6 +110,10 @@ SEVERITY = {
     "SEMANTICS_PARALLEL_CARRIED": "error",
     "COVERAGE_SKIP_NO_INIT": "coverage",
     "TRACE_INCOMPLETE": "coverage",
+    # -- static cost model (performance findings) --
+    "VMEM_OVERFLOW": "error",
+    "FOOTPRINT_NEAR_LIMIT": "coverage",
+    "REDUNDANT_FETCH": "coverage",
 }
 
 
@@ -682,15 +692,459 @@ def check_body(spec, events):
 
 
 # ---------------------------------------------------------------------------
+# Static cost model: VMEM footprint, bytes moved, FLOPs
+# ---------------------------------------------------------------------------
+
+#: Per-core VMEM working-set budget (bytes). TPU cores have ~16 MB of VMEM;
+#: override with ``$REPRO_VMEM_BUDGET`` (plain bytes or a K/M/G suffix).
+DEFAULT_VMEM_BUDGET = 16 * 2**20
+
+#: Fraction of the budget above which FOOTPRINT_NEAR_LIMIT warns.
+NEAR_LIMIT_FRAC = 0.8
+
+#: Grid sizes past this are not walked cell-by-cell; bytes fall back to the
+#: every-visit-fetches upper bound and REDUNDANT_FETCH detection is skipped.
+WALK_CELL_LIMIT = 1 << 20
+
+
+def vmem_budget() -> int:
+    """The configured VMEM budget: ``$REPRO_VMEM_BUDGET`` (bytes, or with a
+    K/M/G suffix, e.g. ``128M``), else :data:`DEFAULT_VMEM_BUDGET`."""
+    raw = os.environ.get("REPRO_VMEM_BUDGET", "").strip()
+    if not raw:
+        return DEFAULT_VMEM_BUDGET
+    mult = {"K": 2**10, "M": 2**20, "G": 2**30}.get(raw[-1].upper(), 1)
+    digits = raw[:-1] if mult != 1 else raw
+    try:
+        val = int(digits) * mult
+    except ValueError:
+        raise ValueError(
+            f"REPRO_VMEM_BUDGET={raw!r} is not a byte count (use plain "
+            "bytes or a K/M/G suffix, e.g. 16M)") from None
+    if val <= 0:
+        raise ValueError(f"REPRO_VMEM_BUDGET={raw!r} must be positive")
+    return val
+
+
+def _itemsize(dtype) -> int:
+    return int(jnp.dtype(dtype).itemsize)
+
+
+def vmem_footprint(spec) -> tuple[int, dict]:
+    """Per-grid-cell resident VMEM bytes: every tile's block (double-buffered
+    when the pipeline streams new blocks under it — i.e. the grid has more
+    than one cell and the tile is blocked rather than whole-array) plus
+    scratch. Cheap (no grid walk): safe to run on every kernel build."""
+    ncells = math.prod(spec.grid) if spec.grid else 1
+    detail = {}
+    for t in list(spec.inputs) + list(spec.outputs):
+        blk = t.resolved_block()
+        nbytes = math.prod(blk) * _itemsize(t.dtype)
+        mult = 1 if (ncells == 1 or blk == tuple(t.shape)) else 2
+        detail[t.name] = nbytes * mult
+    for i, s in enumerate(spec.scratch):
+        detail[f"scratch[{i}]"] = math.prod(s.shape) * _itemsize(s.dtype)
+    return sum(detail.values()), detail
+
+
+def _footprint_findings(spec, *, budget=None):
+    """VMEM_OVERFLOW / FOOTPRINT_NEAR_LIMIT findings for one spec."""
+    budget = vmem_budget() if budget is None else int(budget)
+    total, detail = vmem_footprint(spec)
+    top = ", ".join(f"{k}={v}" for k, v in sorted(
+        detail.items(), key=lambda kv: -kv[1])[:4])
+    if total > budget:
+        return [Finding(
+            "VMEM_OVERFLOW", spec.name, "",
+            f"static VMEM footprint {total} B exceeds the budget {budget} B "
+            f"(largest blocks: {top}); shrink tile blocks or raise "
+            "$REPRO_VMEM_BUDGET")]
+    if total > NEAR_LIMIT_FRAC * budget:
+        return [Finding(
+            "FOOTPRINT_NEAR_LIMIT", spec.name, "",
+            f"static VMEM footprint {total} B is above "
+            f"{int(NEAR_LIMIT_FRAC * 100)}% of the budget {budget} B "
+            f"(largest blocks: {top})")]
+    return []
+
+
+def _runs(seq) -> int:
+    """Number of maximal runs of equal consecutive elements."""
+    it = iter(seq)
+    try:
+        prev = next(it)
+    except StopIteration:
+        return 0
+    n = 1
+    for x in it:
+        if x != prev:
+            n += 1
+            prev = x
+    return n
+
+
+def _sweep_refetches(sweep) -> bool:
+    """True if one outer cell's ordered reduce sweep ``[(rcell, bi), ...]``
+    re-fetches a block it already held, *excluding* inherent re-reads caused
+    by an interleaved independent axis (blocked-GEMM reuse). Axis ``p`` is
+    *dependent* for this tile if two sweep entries differing only at ``p``
+    map to different blocks; entries are grouped by the non-dependent axes'
+    ids, and a group whose ordered block sequence has more runs than distinct
+    blocks thrashed a block it will fetch again."""
+    if len(sweep) < 2:
+        return False
+    nred = len(sweep[0][0])
+    dep = set()
+    for p in range(nred):
+        seen = {}
+        for rcell, bi in sweep:
+            key = rcell[:p] + rcell[p + 1:]
+            if key in seen:
+                if seen[key] != bi:
+                    dep.add(p)
+                    break
+            else:
+                seen[key] = bi
+    groups = {}
+    for rcell, bi in sweep:
+        gkey = tuple(v for q, v in enumerate(rcell) if q not in dep)
+        groups.setdefault(gkey, []).append(bi)
+    return any(_runs(seq) > len(set(seq)) for seq in groups.values())
+
+
+def _walk_costs(spec):
+    """One C-order walk of the concrete grid (the Pallas iteration order):
+    per-tile block-fetch runs -> HBM bytes moved, plus REDUNDANT_FETCH
+    detection on inputs whose reduce sweep re-fetches a block it already
+    held. Pallas elides the copy when the block index repeats consecutively,
+    so bytes = runs x block bytes; accumulated output blocks revisited
+    non-consecutively are also read back (read-modify-write)."""
+    grid = tuple(spec.grid)
+    reduce_axes = tuple(spec.reduce_axes)
+    outer_axes = [d for d in range(len(grid)) if d not in reduce_axes]
+    findings = []
+    bytes_in = 0
+    bytes_out = 0
+
+    cells = list(np.ndindex(*grid)) if grid else [()]
+    cells = [tuple(int(g) for g in c) for c in cells]
+
+    for t in spec.inputs:
+        idx = t.resolved_index(grid)
+        blk_bytes = math.prod(t.resolved_block()) * _itemsize(t.dtype)
+        walk = [tuple(idx(*c)) for c in cells]
+        bytes_in += _runs(walk) * blk_bytes
+        if reduce_axes and len(cells) > 1:
+            sweeps = {}
+            for c, bi in zip(cells, walk):
+                ocell = tuple(c[d] for d in outer_axes)
+                rcell = tuple(c[a] for a in reduce_axes)
+                sweeps.setdefault(ocell, []).append((rcell, bi))
+            if any(_sweep_refetches(sw) for sw in sweeps.values()):
+                findings.append(Finding(
+                    "REDUNDANT_FETCH", spec.name, t.name,
+                    f"input tile {t.name!r}: the reduce sweep re-fetches a "
+                    "block it already held — the index map revisits a block "
+                    "after moving off it. Reorder the reduce walk or hoist "
+                    "the tile (a reduce-invariant map is hoisted "
+                    "automatically on jnp)"))
+
+    for t in spec.outputs:
+        idx = t.resolved_index(grid)
+        blk_bytes = math.prod(t.resolved_block()) * _itemsize(t.dtype)
+        walk = [tuple(idx(*c)) for c in cells]
+        runs = _runs(walk)
+        bytes_out += runs * blk_bytes
+        if spec.output_reduce_axes(t):
+            # revisiting an accumulated block after moving off it re-reads it
+            bytes_in += max(0, runs - len(set(walk))) * blk_bytes
+
+    return bytes_in, bytes_out, findings
+
+
+# -- FLOPs from an abstract body trace --------------------------------------
+
+_ELEMENTWISE_PRIMS = frozenset([
+    "add", "add_any", "sub", "mul", "div", "rem", "max", "min", "pow",
+    "integer_pow", "neg", "abs", "sign", "exp", "exp2", "expm1", "log",
+    "log1p", "tanh", "logistic", "rsqrt", "sqrt", "cbrt", "square",
+    "erf", "erfc", "sin", "cos", "tan", "atan2", "floor", "ceil", "round",
+    "nextafter", "clamp",
+])
+
+_REDUCE_PRIMS = frozenset([
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+    "cumsum", "cummax", "cummin", "cumprod", "cumlogsumexp",
+])
+
+_CALL_PARAM_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr")
+
+
+def _is_float(aval) -> bool:
+    return jnp.issubdtype(aval.dtype, jnp.floating) or \
+        jnp.issubdtype(aval.dtype, jnp.complexfloating)
+
+
+def _jaxpr_flops(jaxpr) -> int:
+    """Floating-point operation count of one jaxpr. Deliberately simple:
+    2*prod(out)*contraction for dot_general, 1/output element for
+    elementwise, 1/input element for reductions, 0 for data movement.
+    ``cond`` counts its widest branch, ``scan`` its body x length, ``while``
+    its body once (a lower bound — trip counts are dynamic)."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            (lc, _rc), _batch = eqn.params["dimension_numbers"]
+            lhs = eqn.invars[0].aval
+            out = eqn.outvars[0].aval
+            contract = math.prod(lhs.shape[d] for d in lc) if lc else 1
+            total += 2 * math.prod(out.shape) * contract
+        elif name == "cond":
+            total += max((_jaxpr_flops(b.jaxpr)
+                          for b in eqn.params["branches"]), default=0)
+        elif name == "scan":
+            total += int(eqn.params["length"]) * \
+                _jaxpr_flops(eqn.params["jaxpr"].jaxpr)
+        elif name == "while":
+            total += _jaxpr_flops(eqn.params["body_jaxpr"].jaxpr)
+        elif name in _ELEMENTWISE_PRIMS:
+            out = eqn.outvars[0].aval
+            if _is_float(out):
+                total += math.prod(out.shape)
+        elif name in _REDUCE_PRIMS:
+            operand = eqn.invars[0].aval
+            if _is_float(operand):
+                total += math.prod(operand.shape)
+        else:
+            for key in _CALL_PARAM_KEYS:
+                inner = eqn.params.get(key) if eqn.params else None
+                if inner is not None:
+                    total += _jaxpr_flops(getattr(inner, "jaxpr", inner))
+                    break
+    return total
+
+
+class _CostTrace:
+    """A :class:`_Trace` stand-in for FLOPs counting: guarded regions get
+    *stable* ids — the path of per-nesting-level guard indices — so the same
+    region keeps its id across repeated body runs with different enabled
+    sets. ``enabled=None`` (discovery) runs every symbolic region; else only
+    regions whose path is in the set run. ``record`` is a no-op (the jaxpr
+    itself is the artifact)."""
+
+    def __init__(self, enabled=None):
+        self._enabled = enabled
+        self._counters = [itertools.count()]
+        self._path: tuple = ()
+        self._stack: list = []          # _RecCtx compatibility
+        self.regions: list[tuple[tuple, tuple]] = []   # (path, tag)
+
+    def record(self, op, ref):
+        pass
+
+    def _enter(self, path):
+        self._path = path
+        self._counters.append(itertools.count())
+
+    def _leave(self):
+        self._counters.pop()
+        self._path = self._path[:-1]
+
+    def guard(self, pred, kind):
+        idx = next(self._counters[-1])
+        path = self._path + (idx,)
+        if isinstance(pred, _Pred):
+            tag = pred.key
+        elif isinstance(pred, (bool, np.bool_)):
+            tag = None if pred else False
+        elif pred is _OPAQUE:
+            tag = ("opaque",)
+        else:
+            try:
+                tag = None if bool(pred) else False
+            except Exception:
+                tag = ("opaque",)
+
+        def deco(fn):
+            if tag is False:
+                return fn
+            if tag is None:  # unconditional: run, but keep nested ids stable
+                self._enter(path)
+                try:
+                    fn()
+                finally:
+                    self._leave()
+                return fn
+            self.regions.append((path, tag))
+            if self._enabled is None or path in self._enabled:
+                self._enter(path)
+                try:
+                    fn()
+                finally:
+                    self._leave()
+            return fn
+
+        return deco
+
+
+def _region_weight(spec, tag) -> float:
+    """Fraction of grid cells a guarded region executes on. Symbolic
+    first/last predicates hit one cell of their reduce space; opaque
+    (data-dependent) guards count fully — a conservative upper bound."""
+    red = tuple(spec.reduce_grid)
+    if tag == ("is_first",) or tag == ("is_last",):
+        return 1.0 / max(1, math.prod(red))
+    if isinstance(tag, tuple) and len(tag) == 2 and \
+            tag[0] in ("reduce_first", "reduce_last"):
+        return 1.0 / max(1, red[tag[1]])
+    return 1.0
+
+
+def estimate_flops(spec, defines=None):
+    """Static per-kernel FLOPs from the abstract body trace: the body is
+    staged with :class:`_CostTrace` under ``jax.make_jaxpr`` once per
+    (ancestor-closed) enabled-region set; each guarded region's marginal
+    FLOPs are weighted by how often its predicate holds over the grid.
+    Returns None when the body cannot be staged."""
+    defines = defines if defines is not None else SimpleNamespace()
+    i32 = jnp.int32
+    gargs = [jax.ShapeDtypeStruct((), i32) for _ in spec.grid]
+    iargs = [jax.ShapeDtypeStruct(t.resolved_block(), t.dtype)
+             for t in spec.inputs]
+    oargs = [jax.ShapeDtypeStruct(t.resolved_block(), t.dtype)
+             for t in spec.outputs]
+    sargs = [jax.ShapeDtypeStruct(s.shape, s.dtype) for s in spec.scratch]
+
+    def staged(trace):
+        def run(gids, ins, outs, scr):
+            ctx = _RecCtx(trace, spec, defines, gids)
+            in_refs = [_RecRef(trace, "input", t.name, v)
+                       for t, v in zip(spec.inputs, ins)]
+            out_refs = [_RecRef(trace, "output", t.name, v)
+                        for t, v in zip(spec.outputs, outs)]
+            ctx.scratch = tuple(
+                _RecRef(trace, "scratch", f"scratch[{i}]", v)
+                for i, v in enumerate(scr))
+            spec.body(ctx, *in_refs, *out_refs)
+            return ()
+        return run
+
+    try:
+        discovery = _CostTrace(None)
+        jax.make_jaxpr(staged(discovery))(gargs, iargs, oargs, sargs)
+        regions = discovery.regions
+
+        memo: dict[frozenset, int] = {}
+
+        def flops_with(enabled: frozenset) -> int:
+            if enabled not in memo:
+                trace = _CostTrace(enabled)
+                jaxpr = jax.make_jaxpr(staged(trace))(
+                    gargs, iargs, oargs, sargs)
+                memo[enabled] = _jaxpr_flops(jaxpr.jaxpr)
+            return memo[enabled]
+
+        per_cell = float(flops_with(frozenset()))
+        for path, tag in regions:
+            ancestors = frozenset(
+                p for p, _t in regions
+                if len(p) < len(path) and p == path[:len(p)])
+            marginal = flops_with(ancestors | {path}) - flops_with(ancestors)
+            weight = _region_weight(spec, tag)
+            for p, t in regions:
+                if len(p) < len(path) and p == path[:len(p)]:
+                    weight *= _region_weight(spec, t)
+            per_cell += weight * max(0, marginal)
+        ncells = math.prod(spec.grid) if spec.grid else 1
+        return int(round(ncells * per_cell))
+    except Exception:
+        return None
+
+
+@dataclasses.dataclass
+class CostReport:
+    """Static roofline terms for one built spec."""
+
+    spec: str
+    grid: tuple
+    cells: int
+    vmem_bytes: int
+    vmem_detail: dict
+    vmem_budget: int
+    bytes_in: int
+    bytes_out: int
+    flops: int | None
+    findings: list
+
+    @property
+    def hbm_bytes(self) -> int:
+        return self.bytes_in + self.bytes_out
+
+    @property
+    def vmem_frac(self) -> float:
+        return self.vmem_bytes / self.vmem_budget if self.vmem_budget else 0.0
+
+    @property
+    def intensity(self) -> float | None:
+        """Arithmetic intensity (FLOPs / HBM byte) — the roofline x-axis."""
+        if self.flops is None or not self.hbm_bytes:
+            return None
+        return self.flops / self.hbm_bytes
+
+    def __str__(self):
+        fl = "?" if self.flops is None else f"{self.flops:,}"
+        ai = self.intensity
+        return (f"{self.spec}: vmem {self.vmem_bytes:,} B "
+                f"({self.vmem_frac:.0%} of budget), hbm {self.hbm_bytes:,} B "
+                f"(in {self.bytes_in:,} / out {self.bytes_out:,}), "
+                f"flops {fl}"
+                + (f", intensity {ai:.2f} flop/B" if ai is not None else ""))
+
+
+def estimate_cost(spec, defines=None, *, budget=None,
+                  walk: bool = True, flops: bool = True) -> CostReport:
+    """The static cost model for one built spec: VMEM footprint vs. budget,
+    HBM bytes moved over the concrete grid walk, and FLOPs from the abstract
+    body trace. ``walk=False``/``flops=False`` skip the expensive passes
+    (footprint alone is cheap enough for every build)."""
+    budget = vmem_budget() if budget is None else int(budget)
+    vmem, detail = vmem_footprint(spec)
+    findings = _footprint_findings(spec, budget=budget)
+    ncells = math.prod(spec.grid) if spec.grid else 1
+    if walk and ncells <= WALK_CELL_LIMIT:
+        bytes_in, bytes_out, fetch_findings = _walk_costs(spec)
+        findings += fetch_findings
+    else:
+        # upper bound: every visit fetches its block, every output visit
+        # writes it back (no consecutive-index elision credit)
+        bytes_in = sum(
+            ncells * math.prod(t.resolved_block()) * _itemsize(t.dtype)
+            for t in spec.inputs)
+        bytes_out = sum(
+            ncells * math.prod(t.resolved_block()) * _itemsize(t.dtype)
+            for t in spec.outputs)
+    fl = estimate_flops(spec, defines) if flops else None
+    return CostReport(
+        spec=spec.name, grid=tuple(spec.grid), cells=ncells,
+        vmem_bytes=vmem, vmem_detail=detail, vmem_budget=budget,
+        bytes_in=int(bytes_in), bytes_out=int(bytes_out), flops=fl,
+        findings=findings)
+
+
+# ---------------------------------------------------------------------------
 # Entry points
 # ---------------------------------------------------------------------------
 
-def analyze_spec(spec, defines=None, *, body=True) -> Report:
+def analyze_spec(spec, defines=None, *, body=True, footprint=True) -> Report:
     """Full analysis of one built Spec: grid invariants + semantics
-    consistency + (``body=True``) the recording body trace."""
+    consistency + (``footprint=True``) VMEM budget accounting +
+    (``body=True``) the recording body trace."""
     findings, _ = check_grid_invariants(spec)
     findings = list(findings)
     findings += check_semantics(spec)
+    if footprint:
+        findings += _footprint_findings(spec)
     if body and not findings:
         try:
             events = trace_body(spec, defines)
@@ -712,6 +1166,7 @@ def check_built_spec(spec, defines=None, *, mode: str | None = None) -> Report:
     if mode == "off":
         return Report(spec.name, [])
     findings = list(check_semantics(spec))
+    findings += _footprint_findings(spec)
     try:
         events = trace_body(spec, defines)
     except Exception as e:

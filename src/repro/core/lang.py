@@ -293,6 +293,16 @@ class Spec:
     def reduce_grid(self) -> tuple[int, ...]:
         return tuple(self.grid[a] for a in self.reduce_axes)
 
+    def resolved_semantics(self) -> tuple[str, ...]:
+        """Per-axis ``dimension_semantics``: the declared tuple, else the
+        default — outer axes are embarrassingly parallel (each output block
+        is written from exactly one outer cell), reduce axes carry scratch
+        state and must stay sequential ("arbitrary")."""
+        if self.dimension_semantics is not None:
+            return tuple(self.dimension_semantics)
+        n_par = len(self.grid) - len(self.reduce_axes)
+        return ("parallel",) * n_par + ("arbitrary",) * len(self.reduce_axes)
+
     def output_reduce_axes(self, t: Tile) -> tuple[int, ...]:
         """The reduce axes this output ACCUMULATES over (sorted grid axes)."""
         if t.reduce is not None:
@@ -733,11 +743,7 @@ def _expand_pallas(spec: Spec, defines: SimpleNamespace, interpret: bool):
     # interpreter ignores compiler params, so only pass them when compiling.
     kwargs = {}
     if not interpret:
-        if spec.dimension_semantics is not None:
-            sem = spec.dimension_semantics
-        else:
-            n_par = len(grid) - len(spec.reduce_axes)
-            sem = ("parallel",) * n_par + ("arbitrary",) * len(spec.reduce_axes)
+        sem = spec.resolved_semantics()
         params_cls = getattr(pltpu, "CompilerParams", None) or \
             getattr(pltpu, "TPUCompilerParams", None)
         if params_cls is not None:

@@ -256,14 +256,17 @@ class Op:
 
     # -- autotuning ----------------------------------------------------------
     def tune(self, args, *, sweep=None, cache=True, warmup=1, repeats=3,
-             validate=True, **kw):
+             validate=True, prune=True, **kw):
         """Sweep this op's tuning knobs on real args; returns the winning
         defines (a :class:`repro.core.tune.TuneResult`).
 
         Sweeps are over DEFINES keys (the builder's addDefine surface).
         Candidates validate against the op's oracle — not against each other.
-        Winners persist under ``$REPRO_CACHE_DIR`` (``cache=False`` opts out):
-        a warm cache performs zero builds and zero timed sweeps."""
+        ``prune=True`` (default) lets the static cost model reject
+        VMEM-overflow and strictly-dominated candidates before they are
+        built or timed (reasons in ``result.pruned``). Winners persist under
+        ``$REPRO_CACHE_DIR`` (``cache=False`` opts out): a warm cache
+        performs zero builds and zero timed sweeps."""
         backend, interpret, params = self._resolve(kw)
         run_args, defines, params = self._prepare(args, params)
         sweep = dict(self.sweep if sweep is None else sweep)
@@ -282,7 +285,8 @@ class Op:
         return _tune.autotune(
             default_device(backend, interpret), self.builder, defines,
             sweep=sweep, args=run_args, warmup=warmup, repeats=repeats,
-            validate=validate, ref=ref, cache=cache, name=self.name)
+            validate=validate, ref=ref, cache=cache, name=self.name,
+            prune=prune)
 
     def cached_winner(self, args, *, sweep=None, **kw):
         """The persisted ``op.tune`` winner for these args, or None — a PURE

@@ -29,8 +29,8 @@ import time
 
 import jax
 
-__all__ = ["autotune", "cached_winner", "TuneResult", "tune_cache_dir",
-           "tune_cache_key", "SCHEMA_VERSION"]
+__all__ = ["autotune", "cached_winner", "prune_candidates", "TuneResult",
+           "tune_cache_dir", "tune_cache_key", "SCHEMA_VERSION"]
 
 # Bump whenever the meaning of a cache entry changes (payload layout, winner
 # semantics, timing protocol). Entries stamped with any other version are
@@ -135,9 +135,11 @@ def cached_winner(name: str, defines: dict, sweep: dict, backend: str,
 class TuneResult(dict):
     """The winning defines; ``.trials`` holds (defines, seconds) for all
     candidates, ``.best_seconds`` the winning time, ``.skipped`` the
-    (defines, reason) pairs rejected at build time (invalid tilings), and
-    ``.cached`` whether the result came from the persistent cache (in which
-    case ``.trials`` is empty — nothing was re-timed)."""
+    (defines, reason) pairs rejected before timing — at build time (invalid
+    tilings) or by the static cost model (``prune[...]`` reasons, also
+    exposed as ``.pruned``) — and ``.cached`` whether the result came from
+    the persistent cache (in which case ``.trials`` is empty — nothing was
+    re-timed)."""
 
     def __init__(self, best_defines, trials, skipped=(), best_seconds=None,
                  cached=False):
@@ -149,6 +151,82 @@ class TuneResult(dict):
         self.best_seconds = best_seconds
         self.skipped = list(skipped)
         self.cached = cached
+
+    @property
+    def pruned(self):
+        """(defines, reason) pairs rejected by the static cost model."""
+        return [(c, r) for c, r in self.skipped if r.startswith("prune[")]
+
+
+def prune_candidates(builder, defines: dict, sweep: dict, *, budget=None):
+    """Static cost pass over a sweep's candidate space — no kernel is built
+    or timed. Returns ``(kept, pruned)`` where ``kept`` is the list of
+    candidate defines dicts still worth timing and ``pruned`` is a list of
+    ``(candidate, reason)`` pairs, reasons prefixed ``prune[CODE]:``.
+
+    Two rejection rules, both fail-open (a candidate the model cannot
+    evaluate is kept for the build loop to judge):
+
+    * ``prune[VMEM_OVERFLOW]`` — the static footprint exceeds the VMEM
+      budget; the build would raise the same verdict, so don't pay for it.
+    * ``prune[DOMINATED]`` — another candidate that itself fits the budget
+      moves no more HBM bytes AND does no more FLOPs, at least one strictly
+      less. The static model ranks it at-least-as-fast, so timing the
+      dominated candidate buys nothing. VMEM footprint is deliberately NOT
+      part of the dominance vector: bigger blocks nearly always trade
+      footprint for bytes/FLOPs, and a footprint term would make dominance
+      vacuous — the budget check alone polices VMEM.
+    """
+    from types import SimpleNamespace
+
+    from . import analyze as _analyze
+
+    budget = _analyze.vmem_budget() if budget is None else int(budget)
+    names = sorted(sweep)
+    cands = []   # (cand, report | None)
+    for combo in itertools.product(*(sweep[n] for n in names)):
+        cand = dict(defines, **dict(zip(names, combo)))
+        try:
+            spec = builder(SimpleNamespace(**cand))
+            rep = _analyze.estimate_cost(
+                spec, SimpleNamespace(**cand), budget=budget)
+        except Exception:
+            rep = None   # invalid/unmodelable: the build loop decides
+        cands.append((cand, rep))
+
+    kept, pruned = [], []
+    fitting = [(c, r) for c, r in cands
+               if r is not None and r.vmem_bytes <= budget]
+    for cand, rep in cands:
+        if rep is None:
+            kept.append(cand)
+            continue
+        if rep.vmem_bytes > budget:
+            pruned.append((cand, (
+                f"prune[VMEM_OVERFLOW]: static footprint {rep.vmem_bytes} B "
+                f"> budget {budget} B")))
+            continue
+        dominator = None
+        if rep.flops is not None:
+            for other, orep in fitting:
+                if other is cand or orep.flops is None:
+                    continue
+                if (orep.hbm_bytes <= rep.hbm_bytes
+                        and orep.flops <= rep.flops
+                        and (orep.hbm_bytes < rep.hbm_bytes
+                             or orep.flops < rep.flops)):
+                    dominator = (other, orep)
+                    break
+        if dominator is not None:
+            other, orep = dominator
+            over = {n: other[n] for n in names}
+            pruned.append((cand, (
+                f"prune[DOMINATED]: {over} moves {orep.hbm_bytes} B vs "
+                f"{rep.hbm_bytes} B and does {orep.flops} vs {rep.flops} "
+                "FLOPs — statically at-least-as-fast")))
+            continue
+        kept.append(cand)
+    return kept, pruned
 
 
 def _time_once(kernel, args, *, warmup=1, repeats=3):
@@ -176,17 +254,22 @@ def _as_output_tuple(x):
 
 def autotune(device, builder, defines: dict, *, sweep: dict, args,
              warmup: int = 1, repeats: int = 3, validate: bool = True,
-             ref=None, cache: bool = False, name: str | None = None):
+             ref=None, cache: bool = False, name: str | None = None,
+             prune: bool = True, budget=None):
     """Grid-search ``sweep`` (name -> candidate values) over ``defines``.
 
     Invalid candidates (non-dividing blocks etc.) are skipped via the
-    Spec validation errors. With ``validate=True`` every candidate's output
-    is checked against ``ref`` — an independent oracle, either a callable
-    ``ref(*args)`` or precomputed output arrays — when one is given; without
-    a ref, candidates are cross-checked against the first valid candidate
-    (tuning must not change results — the paper's correctness-portability
-    contract — but a bug shared with the first candidate self-certifies,
-    so declare a ref whenever one exists).
+    Spec validation errors. With ``prune=True`` (default) the static cost
+    model rejects candidates *before* any build or timing — VMEM-overflow
+    and strictly-dominated candidates land in ``.skipped`` with a
+    ``prune[...]`` reason (see :func:`prune_candidates`; ``budget``
+    overrides the VMEM budget). With ``validate=True`` every candidate's
+    output is checked against ``ref`` — an independent oracle, either a
+    callable ``ref(*args)`` or precomputed output arrays — when one is
+    given; without a ref, candidates are cross-checked against the first
+    valid candidate (tuning must not change results — the paper's
+    correctness-portability contract — but a bug shared with the first
+    candidate self-certifies, so declare a ref whenever one exists).
 
     ``cache=True`` consults/updates the persistent winner cache under
     ``$REPRO_CACHE_DIR`` before sweeping; ``name`` keys the cache entry
@@ -211,10 +294,22 @@ def autotune(device, builder, defines: dict, *, sweep: dict, args,
         out = ref(*args) if callable(ref) else ref
         reference = [np.asarray(o) for o in _as_output_tuple(out)]
 
-    trials = []
     skipped = []
-    for combo in itertools.product(*(sweep[n] for n in names)):
-        cand = dict(defines, **dict(zip(names, combo)))
+    if prune:
+        candidates, pruned = prune_candidates(
+            builder, defines, sweep, budget=budget)
+        skipped.extend(pruned)
+        if not candidates and pruned:
+            raise ValueError(
+                "every sweep candidate was statically pruned:\n"
+                + "\n".join(f"  {c}: {r}" for c, r in pruned))
+    else:
+        candidates = [dict(defines, **dict(zip(names, combo)))
+                      for combo in itertools.product(*(sweep[n]
+                                                       for n in names))]
+
+    trials = []
+    for cand in candidates:
         try:
             kernel = device.build_kernel(builder, cand)
         except (ValueError, AssertionError) as e:

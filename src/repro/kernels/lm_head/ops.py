@@ -19,6 +19,8 @@ Megatron padding columns inside the kernel.
 
 from __future__ import annotations
 
+from types import SimpleNamespace
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -124,6 +126,27 @@ def _ce_residuals(outs, args, params):
     return x, w, labels, lse
 
 
+def _fit_bwd_vmem(bdef: dict) -> dict:
+    """The bwd working set carries f32 dx AND dw blocks on top of x/w — at
+    large (d, V) the forward's fitted ``block_v`` can blow the VMEM budget.
+    Shrink the vocab block (largest divisor of V first) until the static
+    footprint fits; if nothing fits, keep the smallest candidate and let the
+    build-time VMEM_OVERFLOW verdict report it."""
+    from repro.core import analyze as _an
+
+    budget = _an.vmem_budget()
+    V, bv = int(bdef["V"]), int(bdef["block_v"])
+    while True:
+        spec = lm_head_bwd_builder(SimpleNamespace(**dict(bdef, block_v=bv)))
+        if _an.vmem_footprint(spec)[0] <= budget:
+            break
+        smaller = next((b for b in range(bv // 2, 0, -1) if V % b == 0), None)
+        if smaller is None:
+            break
+        bv = smaller
+    return dict(bdef, block_v=bv)
+
+
 def _ce_bwd(params, res, g):
     x, w, labels, lse = res
     R = x.shape[0]
@@ -133,9 +156,9 @@ def _ce_bwd(params, res, g):
     xp, labp = _pad_rows(x, pad), _pad_rows(labels, pad)
     D = _ce_defines((xp, w, labp), params)
     dev = default_device(params["backend"], params.get("interpret"))
-    kern = dev.build_kernel(lm_head_bwd_builder, dict(
+    kern = dev.build_kernel(lm_head_bwd_builder, _fit_bwd_vmem(dict(
         R=D["R"], d=D["d"], V=D["V"], vocab=D["vocab"],
-        block_r=D["block_r"], block_v=D["block_v"], dtype=D["dtype"]))
+        block_r=D["block_r"], block_v=D["block_v"], dtype=D["dtype"])))
     g2 = _pad_rows(jnp.asarray(g, jnp.float32).reshape(-1, 1), pad)
     dx, dw = kern.run(xp, w, labp, lse, g2)
     # integer primals carry the canonical float0 cotangent

@@ -89,10 +89,33 @@ def train_probes(cfg, global_batch: int, seq_len: int) -> dict:
     return probes
 
 
+def _winner_overflows(op, args, params, winner) -> bool:
+    """True when a persisted winner's static VMEM footprint exceeds the
+    current ``$REPRO_VMEM_BUDGET`` at these probe shapes — a stale entry
+    tuned under other constraints must not be adopted (the very first build
+    would raise VMEM_OVERFLOW). Best-effort: unmodelable winners adopt."""
+    from types import SimpleNamespace
+
+    from repro.core.analyze import vmem_budget, vmem_footprint
+
+    try:
+        # sweep keys may be op params (flash_decode's block_kv) or bare
+        # defines (matmul's bm/bn/bk): route each winner key accordingly
+        pwin = {k: v for k, v in winner.items() if k in op.defaults}
+        _, _, params = op._resolve(dict(params, **pwin))
+        _, defines, _ = op._prepare(tuple(args), params)
+        spec = op.builder(SimpleNamespace(**dict(defines, **winner)))
+        return vmem_footprint(spec)[0] > vmem_budget()
+    except Exception:
+        return False
+
+
 def adopt_winners(probes: dict) -> dict:
     """Update op defaults from persisted ``op.tune`` winners for ``probes``
     (``$REPRO_CACHE_DIR``) — a pure cache lookup via the op registry, no
-    builds, no timed sweeps. Returns ``{op_name: winner_defines}``."""
+    builds, no timed sweeps (winners only pay a cheap static VMEM-footprint
+    check, so a stale oversized winner can't poison the defaults). Returns
+    ``{op_name: winner_defines}``."""
     import repro.kernels  # noqa: F401 — registers the op families
     from repro.core import registered_ops
 
@@ -105,6 +128,8 @@ def adopt_winners(probes: dict) -> dict:
             winner = op.cached_winner(args, **params)
         except Exception:
             continue  # probe shape invalid for this arch: no winner to adopt
+        if winner and _winner_overflows(op, args, params, winner):
+            continue
         if winner:
             op.defaults.update(winner)
             applied[name] = winner

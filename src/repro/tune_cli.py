@@ -44,18 +44,30 @@ def _materialize(struct, rng, vocab: int):
 def _tune_probe(op, args, params, *, backend, repeats, cache):
     r = op.tune(tuple(args), backend=backend, repeats=repeats, cache=cache,
                 **params)
-    state = ("cache hit" if r.cached else
-             f"{len(r.trials)} trials, {len(r.skipped)} skipped")
+    if r.cached:
+        state = "cache hit"
+    else:
+        pruned = r.pruned
+        invalid = len(r.skipped) - len(pruned)
+        state = (f"{len(r.trials)} trials, {len(pruned)} pruned, "
+                 f"{invalid} skipped")
     winner = {k: r[k] for k in sorted(op.sweep)}
     print(f"[tune] {op.name}: winner {winner} "
           f"({state}, best {r.best_seconds * 1e6:.0f} us)")
+    if not r.cached:
+        for cand, reason in r.pruned:
+            over = {k: cand[k] for k in sorted(op.sweep)}
+            print(f"[tune]   pruned {over}: {reason}")
     return winner
 
 
 def _lint_cache(ops, *, evict: bool) -> int:
     """Audit every persisted autotune winner under ``$REPRO_CACHE_DIR``:
     flag entries whose op left the registry, whose stored defines no longer
-    parse/build, or whose winner defines now fail the static analyzer.
+    parse/build, or whose winner defines now fail the static analyzer —
+    including the cost model's VMEM budget (``analyze_spec`` reports
+    ``VMEM_OVERFLOW`` under the current ``$REPRO_VMEM_BUDGET``, so a stale
+    winner tuned under a larger budget cannot resurrect oversized tiles).
     ``evict=True`` deletes flagged entries. Returns a process exit code
     (1 when problems remain on disk)."""
     import ast
@@ -149,10 +161,23 @@ def main(argv=None):
     if args.evict:
         ap.error("--evict only makes sense with --lint")
     if args.list:
+        from repro.lint_kernels import cost_op
+
         for name in sorted(ops):
             op = ops[name]
             sweep = {k: op.sweep[k] for k in sorted(op.sweep)}
             print(f"{name}: sweep={sweep or '(none)'}")
+            if not op.sweep:
+                continue
+            try:  # static prune preview at the op's example shapes
+                c = cost_op(ops[name], np.random.RandomState(0))
+            except Exception:
+                continue
+            total = c["sweep_kept"] + len(c["sweep_pruned"])
+            print(f"  static prune preview (example shapes): "
+                  f"{len(c['sweep_pruned'])}/{total} candidates pruned")
+            for p in c["sweep_pruned"]:
+                print(f"    {p['overrides']}: {p['reason']}")
         return 0
 
     cache = not args.no_cache

@@ -189,7 +189,9 @@ def test_persistent_tune_cache_skips_resweep(tmp_path, monkeypatch):
     b = jnp.asarray(rng.randn(32, 32), jnp.float32)
     sweep = {"bm": [8, 16], "bn": [16]}
 
-    r1 = matmul.tune((a, b), sweep=sweep, backend="jnp", repeats=1)
+    # prune=False: this test pins the exact unpruned trial count
+    r1 = matmul.tune((a, b), sweep=sweep, backend="jnp", repeats=1,
+                     prune=False)
     assert not r1.cached and len(r1.trials) == 2
     files = list((tmp_path / "autotune").glob("*.json"))
     assert len(files) == 1
@@ -269,7 +271,8 @@ def test_op_tune_validates_against_oracle_and_finite_best_seconds():
     a = jnp.asarray(rng.randn(32, 24), jnp.float32)
     b = jnp.asarray(rng.randn(24, 16), jnp.float32)
     r = matmul.tune((a, b), sweep={"bm": [8, 32], "bk": [8, 24]},
-                    backend="jnp", cache=False, repeats=0)  # repeats=0 bugfix
+                    backend="jnp", cache=False, repeats=0,  # repeats=0 bugfix
+                    prune=False)  # all 4 trials: the repeats=0 path per trial
     assert np.isfinite(r.best_seconds)
     assert len(r.trials) == 4
 

@@ -340,7 +340,8 @@ def test_stale_schema_entries_evicted_not_reused(tmp_path, monkeypatch):
     assert matmul.cached_winner((a, a), sweep=sweep, backend="jnp") is None
     assert not path.exists()
 
-    r2 = matmul.tune((a, a), sweep=sweep, backend="jnp", repeats=1)
+    r2 = matmul.tune((a, a), sweep=sweep, backend="jnp", repeats=1,
+                     prune=False)
     assert not r2.cached and len(r2.trials) == 2
     assert json.loads(path.read_text())["schema"] == SCHEMA_VERSION
 

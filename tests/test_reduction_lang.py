@@ -412,7 +412,7 @@ def test_autotune_warmup_paths(warmup):
                 out_dtype="float32")
     result = autotune(dev, matmul_builder, base,
                       sweep={"bk": [5, 8, 16, 32]},    # 5 is invalid (32 % 5)
-                      args=(a, b), warmup=warmup, repeats=1)
+                      args=(a, b), warmup=warmup, repeats=1, prune=False)
     assert result["bk"] in (8, 16, 32)
     assert len(result.trials) == 3
     assert len(result.skipped) == 1 and result.skipped[0][0]["bk"] == 5
