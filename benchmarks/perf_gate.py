@@ -1,0 +1,105 @@
+"""CI perf gate: the unified kernel language must WIN the paper's benchmarks.
+
+Reads a ``bench_smoke.json`` artifact and, for each app workload (fd2d, sem,
+dg volume, dg surface), compares the BEST unified-backend time against the
+hand-written native jnp baseline at the same shape. The build fails when any
+workload's best unified expansion is more than ``--max-ratio`` (default 1.5x)
+slower than native — the paper's "portability without a performance tax"
+claim, enforced per commit. All ratios are printed either way.
+
+    python -m benchmarks.perf_gate artifacts/bench_smoke.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: workload -> (row prefix, native backend label). A row is
+#: ``<prefix><backend>/<shape...>``; shapes must match exactly across
+#: backends for a comparison to count.
+APPS = {
+    "fd2d": "fd2d/",
+    "sem": "sem/",
+    "dg": "dg/",
+    "dg_surface": "dg/surface/",
+}
+UNIFIED = ("jnp", "loops", "pallas")
+
+
+def _split(name: str, prefix: str) -> tuple[str, str] | None:
+    """``<prefix><backend>/<shape>`` -> (backend, shape), else None."""
+    if not name.startswith(prefix):
+        return None
+    rest = name[len(prefix):]
+    backend, _, shape = rest.partition("/")
+    # keep 'dg/' from swallowing 'dg/surface/...' rows
+    if backend not in UNIFIED and backend != "native":
+        return None
+    return backend, shape
+
+
+def gate(rows: list[dict], max_ratio: float = 1.5) -> list[str]:
+    """Returns failure messages (empty = gate passes); prints all ratios."""
+    failures = []
+    for app, prefix in APPS.items():
+        # shape -> backend -> us
+        times: dict[str, dict[str, float]] = {}
+        for r in rows:
+            hit = _split(r["name"], prefix)
+            if hit is None:
+                continue
+            backend, shape = hit
+            times.setdefault(shape, {})[backend] = float(r["us_per_call"])
+        compared = False
+        for shape, per in sorted(times.items()):
+            native = per.get("native")
+            uni = {b: per[b] for b in UNIFIED if b in per}
+            if native is None or not uni:
+                continue
+            compared = True
+            best_b = min(uni, key=uni.get)
+            ratio = uni[best_b] / native
+            verdict = "OK" if ratio <= max_ratio else "FAIL"
+            print(f"[perf-gate] {app}/{shape}: best unified {best_b} "
+                  f"{uni[best_b]:.1f}us vs native {native:.1f}us "
+                  f"-> {ratio:.2f}x [{verdict}]")
+            for b in UNIFIED:
+                if b in uni and b != best_b:
+                    print(f"[perf-gate]   {b}: {uni[b] / native:.2f}x")
+            if ratio > max_ratio:
+                failures.append(
+                    f"{app}/{shape}: best unified backend ({best_b}) is "
+                    f"{ratio:.2f}x native (limit {max_ratio}x)")
+        if not compared:
+            failures.append(
+                f"{app}: no comparable native-vs-unified rows found "
+                f"(prefix {prefix!r}) — benchmark drift?")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("artifact", help="bench_smoke.json path")
+    ap.add_argument("--max-ratio", type=float, default=1.5,
+                    help="fail when best-unified/native exceeds this "
+                         "(default 1.5)")
+    args = ap.parse_args(argv)
+    with open(args.artifact) as f:
+        rows = json.load(f)
+    failures = gate(rows, args.max_ratio)
+    if failures:
+        print("[perf-gate] FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    print("[perf-gate] all workloads within "
+          f"{args.max_ratio}x of native")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,18 +7,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.apps import sem
-from .common import Row, SMOKE_TIME, time_fn
+from .common import Row, SMOKE_INNER, SMOKE_TIME, time_fn
 
 ORDERS = (1, 2, 3, 4, 5, 6, 7)
 
 
 def run(rows: list, smoke: bool = False):
     tkw = SMOKE_TIME if smoke else {}
+    inner = SMOKE_INNER if smoke else 2
     for n in ((1, 2) if smoke else ORDERS):
         nq = n + 1
         E = max(512 // nq, 32)
         ex = 2 if smoke else max(2, round(E ** (1 / 3)))
-        for backend in ("jnp", "loops", "native"):
+        for backend in ("jnp", "loops", "pallas", "native"):
             model = "jnp" if backend == "native" else backend
             op = sem.SEMOperator(model=model, ex=ex, ey=ex, ez=ex, n=n,
                                  deform=0.1)
@@ -27,11 +28,13 @@ def run(rows: list, smoke: bool = False):
             if backend == "native":
                 fn = jax.jit(lambda u_: sem.apply_ref(u_, op.o_geo.data,
                                                       op.o_dmat.data))
-                sec = time_fn(fn, u, inner=2, **tkw)
+                sec = time_fn(fn, u, inner=inner, **tkw)
             else:
                 if backend == "loops" and n > 4:
                     continue  # serial expansion too slow at high order on CPU
-                sec = time_fn(lambda: op.apply_local(u), inner=2, **tkw)
+                if backend == "pallas" and not smoke and n > 3:
+                    continue  # interpret-mode overhead at high order on CPU
+                sec = time_fn(lambda: op.apply_local(u), inner=inner, **tkw)
             gflops = op.E * sem.sem_flops_per_element(nq) / sec / 1e9
             gbs = op.E * sem.sem_bytes_per_element(nq, 4) / sec / 1e9
             rows.append(Row(f"sem/{backend}/N{n}/E{op.E}", sec,

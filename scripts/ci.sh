@@ -19,7 +19,9 @@
 #            non-default expansion can't hide behind "auto" = pallas
 #   bench    benchmark smoke (tiny shapes, one rep) writing
 #            artifacts/bench_smoke.json, then the row-manifest check — a
-#            benchmark row disappearing fails the build
+#            benchmark row disappearing fails the build — and the perf gate
+#            (benchmarks/perf_gate.py): each app's best unified backend must
+#            be within 1.5x of its native baseline
 #
 # Usage:
 #   scripts/ci.sh                     # all stages
@@ -97,6 +99,10 @@ stage_bench() {
     mkdir -p artifacts
     python -m benchmarks.run --smoke --out artifacts/bench_smoke.json \
         --check-manifest benchmarks/smoke_manifest.txt >/dev/null
+    # perf gate: best unified backend within 1.5x of the native baseline for
+    # every app workload (fd2d / sem / dg volume / dg surface) — the paper's
+    # "portability without a performance tax" claim, enforced per commit
+    python -m benchmarks.perf_gate artifacts/bench_smoke.json
 }
 
 for stage in $STAGES; do

@@ -8,13 +8,15 @@ geometric factors and bathymetry source  S = (0, -g h B_x, -g h B_y).
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import Device, Spec, Tile
 from .numerics import dmatrices_2d, triangle_nodes
 
 __all__ = [
-    "dg_volume_builder", "DGVolume", "make_tri_mesh", "volume_ref",
+    "dg_volume_builder", "dg_surface_builder", "DGVolume", "SWESolver",
+    "make_tri_mesh", "build_connectivity", "volume_ref", "surface_ref",
     "dg_flops_per_element", "dg_bytes_per_element", "GRAV",
 ]
 
@@ -143,7 +145,10 @@ def make_tri_mesh(nx: int, ny: int, n: int, *, seed: int = 0, jitter: float = 0.
 
 
 class DGVolume:
-    """Host driver for the DG SWE volume kernel."""
+    """Host driver for the DG SWE volume kernel.
+
+    ``eb=None`` (default) adopts the persisted ``dg_volume`` autotune winner
+    for this shape/backend when one exists, else the op default fitted to E."""
 
     def __init__(self, *, model: str = "jnp", nx: int = 8, ny: int = 8, n: int = 3,
                  eb: int | None = None, dtype="float32", bathymetry=None,
@@ -152,9 +157,6 @@ class DGVolume:
         m = make_tri_mesh(nx, ny, n, seed=seed, jitter=jitter)
         self.mesh = m
         self.n, self.np_, self.E = n, m["np_"], m["E"]
-        self.eb = eb or min(self.E, 16)
-        while self.E % self.eb:
-            self.eb -= 1
         self.dtype = np.dtype(dtype)
 
         if bathymetry is None:
@@ -172,13 +174,30 @@ class DGVolume:
         self.o_db = self.device.malloc(self.dB.astype(self.dtype))
         self.o_dr = self.device.malloc(m["Dr"].astype(self.dtype))
         self.o_ds = self.device.malloc(m["Ds"].astype(self.dtype))
-        defines = dict(E=self.E, np_=self.np_, eb=self.eb, g=GRAV,
-                       dtype=str(self.dtype))
+
+        from repro.kernels.apps import dg_volume as dgv_op  # late: avoid cycle
+        E, np_ = self.E, self.np_
+        shapes = (jax.ShapeDtypeStruct((E, np_, 3), self.dtype),
+                  jax.ShapeDtypeStruct((E, 4), self.dtype),
+                  jax.ShapeDtypeStruct((E, np_, 2), self.dtype),
+                  jax.ShapeDtypeStruct((np_, np_), self.dtype),
+                  jax.ShapeDtypeStruct((np_, np_), self.dtype))
+        if eb is None:
+            params = dgv_op.cached_winner(
+                shapes, backend=self.device.backend,
+                interpret=self.device.interpret) or {}
+        else:
+            params = dict(eb=eb)
+        defines = dgv_op.derive_defines(shapes, {**dgv_op.defaults, **params})
+        self.eb = defines["eb"]
         self.kernel = self.device.build_kernel(dg_volume_builder, defines)
 
     def rhs_volume(self, Q):
-        (out,) = self.kernel.run(jnp.asarray(Q, self.dtype), self.o_geom.data,
-                                 self.o_db.data, self.o_dr.data, self.o_ds.data)
+        if not (isinstance(Q, jax.Array) and Q.dtype == self.dtype):
+            Q = jnp.asarray(Q, self.dtype)  # skip when already device-typed:
+        (out,) = self.kernel.run(Q, self.o_geom.data,  # per-call asarray costs
+                                 self.o_db.data,       # ~2x the kernel itself
+                                 self.o_dr.data, self.o_ds.data)
         return out
 
 
@@ -307,6 +326,29 @@ def dg_surface_builder(D):
     )
 
 
+def surface_ref(QM, QP, nrm, lift, g=GRAV):
+    """Independent pure-jnp oracle for the surface-flux kernel: local
+    Lax-Friedrichs numerical flux on pre-gathered face traces + LIFT."""
+    nx_, ny_, fsc = nrm[..., 0], nrm[..., 1], nrm[..., 2]
+
+    def flux(Q):
+        h, hu, hv = Q[..., 0], Q[..., 1], Q[..., 2]
+        u, v = hu / h, hv / h
+        gh2 = 0.5 * g * h * h
+        Fn = jnp.stack([hu * nx_ + hv * ny_,
+                        (hu * u + gh2) * nx_ + hu * v * ny_,
+                        hu * v * nx_ + (hv * v + gh2) * ny_], -1)
+        lam = jnp.abs(u * nx_ + v * ny_) + jnp.sqrt(g * h)
+        return Fn, lam
+
+    FM, lamM = flux(QM)
+    FP, lamP = flux(QP)
+    C = jnp.maximum(lamM, lamP)[..., None]
+    fstar = 0.5 * (FM + FP) + 0.5 * C * (QM - QP)
+    dflux = (FM - fstar) * fsc[..., None]
+    return jnp.einsum("nf,efq->enq", lift, dflux)
+
+
 # low-storage 5-stage RK (Carpenter/Kennedy)
 _LSERK_A = (0.0, -567301805773 / 1357537059087, -2404267990393 / 2016746695238,
             -3550918686646 / 2091501179385, -1275806237668 / 842570457699)
@@ -335,8 +377,16 @@ class SWESolver(DGVolume):
         self.bnd = jnp.asarray(
             np.repeat(self.conn["boundary"], self.n + 1, axis=1))  # (E,3nfp)
         self.nrm_j = jnp.asarray(nrm)
-        defines = dict(E=self.E, np_=self.np_, nfp3=nfp3, eb=self.eb,
-                       g=GRAV, dtype=str(self.dtype))
+
+        from repro.kernels.apps import dg_surface as dgs_op  # late: avoid cycle
+        shapes = (jax.ShapeDtypeStruct((self.E, nfp3, 3), self.dtype),
+                  jax.ShapeDtypeStruct((self.E, nfp3, 3), self.dtype),
+                  jax.ShapeDtypeStruct((self.E, nfp3, 3), self.dtype),
+                  jax.ShapeDtypeStruct((self.np_, nfp3), self.dtype))
+        params = dgs_op.cached_winner(
+            shapes, backend=self.device.backend,
+            interpret=self.device.interpret) or dict(eb=self.eb)
+        defines = dgs_op.derive_defines(shapes, {**dgs_op.defaults, **params})
         self.surf_kernel = self.device.build_kernel(dg_surface_builder, defines)
 
     def rhs(self, Q):
@@ -350,8 +400,9 @@ class SWESolver(DGVolume):
                           QM[..., 1] - 2 * qn * nx_,
                           QM[..., 2] - 2 * qn * ny_], -1)
         QP = jnp.where(self.bnd[..., None], wall, QP)
-        (surf,) = self.surf_kernel.run(QM.astype(self.dtype),
-                                       QP.astype(self.dtype),
+        if QM.dtype != self.dtype:  # gathers preserve dtype; cast only if not
+            QM, QP = QM.astype(self.dtype), QP.astype(self.dtype)
+        (surf,) = self.surf_kernel.run(QM, QP,
                                        self.o_nrm.data, self.o_lift.data)
         return self.rhs_volume(Q) + surf
 

@@ -19,43 +19,40 @@ __all__ = ["fd2d_builder", "FDWave", "reference_step", "fd_flops_per_step"]
 
 
 def fd2d_builder(D):
-    """Kernel builder (the paper's fd2d.occa). Defines: w,h,bh,r,dt,dx,weights,dtype.
+    """Kernel builder (the paper's fd2d.occa). Defines: w,h,bh,bw,r,dt,dx,
+    weights,dtype.
 
-    Each work-group (grid cell) owns a row stripe and caches its stripe plus
-    the r-row periodic halo into "shared memory" (VMEM), exactly the paper's
-    manual-caching pattern — per-cell work is proportional to the stripe."""
+    Each work-group (grid cell) owns a ``(bh, bw)`` block of the field and
+    reads it through a halo tile: the language fetches the block plus its
+    r-point periodic fringe on every side — the paper's manual "shared
+    memory" caching pattern, without ever touching the field outside the
+    ``(bh + 2r, bw + 2r)`` window."""
     weights = tuple(D.weights)
     inv_dx2 = 1.0 / (D.dx * D.dx)
     dt2 = D.dt * D.dt
     dtype = jnp.dtype(D.dtype)
-    r, bh, w, h = D.r, D.bh, D.w, D.h
+    r, bh, bw, w, h = D.r, D.bh, D.bw, D.w, D.h
 
     def body(ctx, u1, u2, u3):
-        bi = ctx.outer_id(0)
-        U = ctx.cache(u1)                                # whole field (HBM view)
-        # stripe + halo rows [bi*bh - r, bi*bh + bh + r) with periodic wrap:
-        rolled = jnp.roll(U, r, axis=0)
-        padded = jnp.concatenate([rolled, rolled[:2 * r]], axis=0)
-        win = jax.lax.dynamic_slice(padded, (bi * bh, 0), (bh + 2 * r, w))
-        ctx.barrier()                                    # halo cached ("shared")
-        inner = win[r:r + bh]
-        lap = jnp.zeros((bh, w), jnp.float32)
-        for k in range(-r, r + 1):                       # unrolled radius loop
+        win = ctx.cache(u1)                  # (bh+2r, bw+2r) haloed window
+        ctx.barrier()                        # halo cached ("shared")
+        inner = win[r:r + bh, r:r + bw]
+        lap = jnp.zeros((bh, bw), jnp.float32)
+        for k in range(-r, r + 1):           # unrolled radius loop
             wk = weights[k + r]
-            lap = lap + wk * win[r + k:r + k + bh]                  # vertical
-            lap = lap + wk * jnp.roll(inner, -k, axis=1)            # horizontal
+            lap = lap + wk * win[r + k:r + k + bh, r:r + bw]    # vertical
+            lap = lap + wk * win[r:r + bh, r + k:r + k + bw]    # horizontal
         lap = lap * inv_dx2
         u3[...] = (2.0 * inner - u2[...] + dt2 * lap).astype(dtype)
 
     return Spec(
         "fd2d",
-        grid=(D.h // bh,),
+        grid=(h // bh, w // bw),
         inputs=[
-            Tile("u1", (h, w), dtype),                           # whole-array (halo)
-            Tile("u2", (h, w), dtype, block=(bh, w), index=lambda i: (i, 0)),
+            Tile("u1", (h, w), dtype, block=(bh, bw), halo=(r, r), wrap=True),
+            Tile("u2", (h, w), dtype, block=(bh, bw)),
         ],
-        outputs=[Tile("u3", (h, w), dtype, block=(bh, w),
-                      index=lambda i: (i, 0))],
+        outputs=[Tile("u3", (h, w), dtype, block=(bh, bw))],
         body=body,
     )
 
@@ -77,11 +74,17 @@ def fd_flops_per_step(w: int, h: int, r: int) -> int:
 
 
 class FDWave:
-    """Host driver mirroring the paper's listing 9."""
+    """Host driver mirroring the paper's listing 9.
+
+    Block sizes flow through the registered ``fd2d`` op: ``block=None``
+    (default) adopts the persisted autotune winner for this shape/backend
+    when one exists (``repro.tune_cli --apps`` writes it), falling back to
+    the op's declared defaults. An explicit ``block=(bh, bw)`` pins the
+    tile (0 means "full extent" along that axis)."""
 
     def __init__(self, *, model: str = "jnp", width: int = 128, height: int = 128,
                  radius: int = 1, cfl: float = 0.5, dtype="float32",
-                 block: tuple[int, int] = (32, 0)):
+                 block: tuple[int, int] | None = None):
         self.device = Device(model)
         self.w, self.h, self.r = width, height, radius
         self.dx = 2.0 / width
@@ -108,12 +111,20 @@ class FDWave:
         self.o_u2 = self.device.malloc(um1)   # u at t_{n-1}
         self.o_u3 = self.device.malloc(np.zeros_like(u0))
 
-        bh = self.block[0]
-        while h % bh:
-            bh -= 1
-        defines = dict(w=w, h=h, bh=bh,
-                       r=self.r, dt=float(self.dt), dx=float(self.dx),
-                       weights=self.weights, dtype=str(self.dtype))
+        # defines via the registered op (shared fit_block derivation + the
+        # persisted-autotune winner for this shape/backend, when present)
+        from repro.kernels.apps import fd2d as fd2d_op  # late: avoid cycle
+        params = dict(weights=self.weights, dx=float(self.dx),
+                      dt=float(self.dt))
+        if self.block is None:
+            shapes = (jax.ShapeDtypeStruct((h, w), self.dtype),) * 2
+            params.update(fd2d_op.cached_winner(
+                shapes, backend=self.device.backend,
+                interpret=self.device.interpret, **params) or {})
+        else:
+            params.update(bh=self.block[0] or h, bw=self.block[1] or w)
+        defines = fd2d_op.derive_defines(
+            (u0, um1), {**fd2d_op.defaults, **params})
         self.fd2d = self.device.build_kernel(fd2d_builder, defines)
 
     # paper: timestep()

@@ -9,6 +9,7 @@ M = J * w.  One kernel source; jnp / loops / pallas expansions.
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import Device, Spec, Tile
@@ -203,7 +204,11 @@ def scatter_add(u_loc, gid, nglob):
 
 class SEMOperator:
     """Host driver: builds the kernel once per (backend, defines) and applies
-    the assembled (gather-scatter) operator to global dof vectors."""
+    the assembled (gather-scatter) operator to global dof vectors.
+
+    ``eb=None`` (default) adopts the persisted ``sem_apply`` autotune winner
+    for this shape/backend when one exists, else the op default fitted to E;
+    an explicit ``eb`` pins the block."""
 
     def __init__(self, *, model: str = "jnp", ex: int = 2, ey: int = 2, ez: int = 2,
                  n: int = 4, eb: int | None = None, deform: float = 0.15,
@@ -213,20 +218,32 @@ class SEMOperator:
         coords, self.gid, self.nglob = make_box_mesh(ex, ey, ez, n, deform=deform,
                                                      seed=seed)
         self.E = self.gid.shape[0]
-        self.eb = eb or min(self.E, 32)
-        while self.E % self.eb:
-            self.eb -= 1
         G, self.mass = geometric_factors(coords, n, kappa=kappa, alpha=alpha)
         self.dtype = np.dtype(dtype)
         self.o_geo = self.device.malloc(G.astype(self.dtype))
         self.o_dmat = self.device.malloc(dmatrix_1d(n).astype(self.dtype))
-        defines = dict(E=self.E, nq=self.nq, eb=self.eb, dtype=str(self.dtype))
+
+        from repro.kernels.apps import sem_apply as sem_op  # late: avoid cycle
+        nq = self.nq
+        shapes = (jax.ShapeDtypeStruct((self.E, nq, nq, nq), self.dtype),
+                  jax.ShapeDtypeStruct((self.E, 7, nq, nq, nq), self.dtype),
+                  jax.ShapeDtypeStruct((nq, nq), self.dtype))
+        if eb is None:
+            params = sem_op.cached_winner(
+                shapes, backend=self.device.backend,
+                interpret=self.device.interpret) or {}
+        else:
+            params = dict(eb=eb)
+        defines = sem_op.derive_defines(shapes, {**sem_op.defaults, **params})
+        self.eb = defines["eb"]
         self.kernel = self.device.build_kernel(sem_builder, defines)
         self.gid_j = jnp.asarray(self.gid)
 
     def apply_local(self, u_local):
-        (out,) = self.kernel.run(jnp.asarray(u_local), self.o_geo.data,
-                                 self.o_dmat.data)
+        if not isinstance(u_local, jax.Array):
+            u_local = jnp.asarray(u_local)  # per-call asarray on a jax array
+        (out,) = self.kernel.run(u_local, self.o_geo.data,   # costs ~2x the
+                                 self.o_dmat.data)           # kernel itself
         return out
 
     def apply_global(self, u_glob):

@@ -102,6 +102,7 @@ ANALYZE_MODES = ("off", "warn", "error", "strict")
 # hazards gated by the strictness knob
 SEVERITY = {
     "BOUNDS_INDEX": "error",
+    "BOUNDS_HALO": "error",
     "BOUNDS_SCRATCH": "error",
     "RACE_PARALLEL_WRITE": "error",
     "SEMANTICS_ACC_INDEX": "error",
@@ -236,6 +237,17 @@ def check_grid_invariants(spec):
         blk = t.resolved_block()
         idx = t.resolved_index(spec.grid)
         nb = tuple(s // bb for s, bb in zip(t.shape, blk))
+        for ax, (r, s) in enumerate(zip(t.resolved_halo(), t.shape)):
+            # a radius past the array extent would wrap more than one full
+            # period (or clamp a window wider than the data) — certainly a
+            # mis-sized stencil, on every backend
+            if r > s:
+                findings.append(Finding(
+                    "BOUNDS_HALO", spec.name, t.name,
+                    f"input tile {t.name!r}: halo radius {r} on axis {ax} "
+                    f"exceeds the array extent {s} — the fetched window "
+                    "would span more than one full period of the data"))
+                return findings, input_reduce_invariant
         inv = True
         bi0 = None
         for cell in np.ndindex(*spec.grid):
@@ -591,7 +603,7 @@ def trace_body(spec, defines=None):
     jax.eval_shape(
         run,
         [jax.ShapeDtypeStruct((), i32) for _ in spec.grid],
-        [jax.ShapeDtypeStruct(t.resolved_block(), t.dtype)
+        [jax.ShapeDtypeStruct(t.body_block(), t.dtype)
          for t in spec.inputs],
         [jax.ShapeDtypeStruct(t.resolved_block(), t.dtype)
          for t in spec.outputs],
@@ -739,7 +751,9 @@ def vmem_footprint(spec) -> tuple[int, dict]:
     detail = {}
     for t in list(spec.inputs) + list(spec.outputs):
         blk = t.resolved_block()
-        nbytes = math.prod(blk) * _itemsize(t.dtype)
+        # the body sees the block grown by any halo fringe — that window is
+        # what actually sits in VMEM per cell
+        nbytes = math.prod(t.body_block()) * _itemsize(t.dtype)
         mult = 1 if (ncells == 1 or blk == tuple(t.shape)) else 2
         detail[t.name] = nbytes * mult
     for i, s in enumerate(spec.scratch):
@@ -831,7 +845,9 @@ def _walk_costs(spec):
 
     for t in spec.inputs:
         idx = t.resolved_index(grid)
-        blk_bytes = math.prod(t.resolved_block()) * _itemsize(t.dtype)
+        # halo tiles fetch the overlapped window, not the bare block: the
+        # amplification (b + 2r) / b per axis is real HBM traffic
+        blk_bytes = math.prod(t.body_block()) * _itemsize(t.dtype)
         walk = [tuple(idx(*c)) for c in cells]
         bytes_in += _runs(walk) * blk_bytes
         if reduce_axes and len(cells) > 1:
@@ -1010,7 +1026,7 @@ def estimate_flops(spec, defines=None):
     defines = defines if defines is not None else SimpleNamespace()
     i32 = jnp.int32
     gargs = [jax.ShapeDtypeStruct((), i32) for _ in spec.grid]
-    iargs = [jax.ShapeDtypeStruct(t.resolved_block(), t.dtype)
+    iargs = [jax.ShapeDtypeStruct(t.body_block(), t.dtype)
              for t in spec.inputs]
     oargs = [jax.ShapeDtypeStruct(t.resolved_block(), t.dtype)
              for t in spec.outputs]
@@ -1117,9 +1133,12 @@ def estimate_cost(spec, defines=None, *, budget=None,
         findings += fetch_findings
     else:
         # upper bound: every visit fetches its block, every output visit
-        # writes it back (no consecutive-index elision credit)
+        # writes it back (no consecutive-index elision credit) — EXCEPT
+        # whole-array input tiles, which are grid-invariant (one resident
+        # copy, a constant index map) and fetched exactly once
         bytes_in = sum(
-            ncells * math.prod(t.resolved_block()) * _itemsize(t.dtype)
+            (1 if t.resolved_block() == tuple(t.shape) else ncells)
+            * math.prod(t.body_block()) * _itemsize(t.dtype)
             for t in spec.inputs)
         bytes_out = sum(
             ncells * math.prod(t.resolved_block()) * _itemsize(t.dtype)

@@ -142,10 +142,18 @@ class Tile:
     """One kernel argument: full array shape + its per-grid-cell block.
 
     ``block=None`` means the whole array is visible to every grid cell (the
-    "global memory" view, e.g. for stencil halos). ``index`` maps grid ids to
-    *block* indices (Pallas convention); ``None`` selects the canonical
-    identity map (requires ``len(grid) == ndim``) or the constant-zero map for
-    whole-array tiles.
+    "global memory" view). ``index`` maps grid ids to *block* indices (Pallas
+    convention); ``None`` selects the canonical identity map (requires
+    ``len(grid) == ndim``) or the constant-zero map for whole-array tiles.
+
+    ``halo=(r0, r1, ...)`` (INPUT tiles only, requires ``block=``) fetches
+    each block with a per-axis halo: the body sees a
+    ``(b0 + 2*r0, b1 + 2*r1, ...)`` window centered on the block, with the
+    out-of-block fringe taken periodically (``wrap=True``, the default) or
+    edge-clamped (``wrap=False``) — the stencil pattern, without caching the
+    whole field per grid cell. The index map is unchanged (it still returns
+    un-haloed block indices); interior element ``(i, j)`` of the block lives
+    at ``window[r0 + i, r1 + j]``.
     """
 
     name: str
@@ -162,6 +170,11 @@ class Tile:
     # axes; () = none (same as stream=True). The index map may depend on the
     # reduce axes NOT in this set — per-output reduce granularity.
     reduce: tuple[int, ...] | None = None
+    # Input tiles only: per-axis halo radii; the fetched window is the block
+    # plus r elements on each side along every axis (see class docstring).
+    halo: tuple[int, ...] | None = None
+    # Halo boundary rule: periodic wrap (True) or edge clamp (False).
+    wrap: bool = True
 
     def resolved_block(self) -> tuple[int, ...]:
         blk = tuple(self.shape) if self.block is None else tuple(self.block)
@@ -173,6 +186,31 @@ class Tile:
                 raise ValueError(
                     f"tile {self.name!r}: block {blk} does not divide shape {self.shape}")
         return blk
+
+    def resolved_halo(self) -> tuple[int, ...]:
+        """Validated per-axis halo radii ((0,)*ndim when no halo)."""
+        if self.halo is None:
+            return (0,) * len(self.shape)
+        halo = tuple(int(r) for r in self.halo)
+        if len(halo) != len(self.shape):
+            raise ValueError(
+                f"tile {self.name!r}: halo rank {len(halo)} != array rank "
+                f"{len(self.shape)}")
+        if any(r < 0 for r in halo):
+            raise ValueError(f"tile {self.name!r}: negative halo radius {halo}")
+        if self.block is None and any(halo):
+            raise ValueError(
+                f"tile {self.name!r}: halo= requires a blocked tile (block=); "
+                "a whole-array tile already sees every element")
+        return halo
+
+    def body_block(self) -> tuple[int, ...]:
+        """The block shape the BODY sees: the resolved block grown by the
+        halo fringe (identical to ``resolved_block()`` for halo-free tiles).
+        This is also the per-cell VMEM-resident shape the cost model prices."""
+        return tuple(b + 2 * r
+                     for b, r in zip(self.resolved_block(),
+                                     self.resolved_halo()))
 
     def resolved_index(self, grid: tuple[int, ...]) -> Callable[..., tuple]:
         if self.index is not None:
@@ -267,6 +305,14 @@ class Spec:
                 raise ValueError(
                     f"input tile {t.name!r}: stream=/reduce= are output-only "
                     "declarations (inputs are read at every visit)")
+            t.resolved_halo()  # structural halo validation (rank/sign/block)
+
+        for t in self.outputs:
+            # a halo is a FETCH pattern; overlapping output windows would race
+            if t.halo is not None and any(int(r) for r in t.halo):
+                raise ValueError(
+                    f"output tile {t.name!r}: halo= is input-only "
+                    "(overlapping output windows would write racily)")
 
         # Concrete-grid invariants — non-dividing blocks, out-of-range index
         # maps (inputs AND outputs), parallel-cell write races, accumulated-
@@ -524,6 +570,65 @@ class Ctx:
 
 
 # ---------------------------------------------------------------------------
+# Halo lowering
+# ---------------------------------------------------------------------------
+#
+# A halo tile is lowered to a REGULAR blocked tile over a windowed layout
+# before any backend sees it: per block index ``i`` along a haloed axis, the
+# window ``[i*b - r, (i+1)*b + r)`` (periodic or edge-clamped) is materialized
+# contiguously, so block ``i`` of the lowered array IS the haloed window and
+# every backend — including Pallas, whose BlockSpec cannot express
+# overlapping fetches — runs the exact same non-overlapping blocked machinery.
+# The gather is one static-index ``jnp.take`` per haloed axis on the host
+# side of the call; its cost is the halo amplification ``(b + 2r) / b`` the
+# static cost model charges for the tile.
+
+def _halo_axis_index(nblocks: int, b: int, r: int, s: int, wrap: bool):
+    """Static source indices for one haloed axis's windowed layout."""
+    offs = np.arange(-r, b + r)
+    idx = (np.arange(nblocks)[:, None] * b + offs[None, :]).reshape(-1)
+    return idx % s if wrap else np.clip(idx, 0, s - 1)
+
+
+def _lower_halo_tile(tile: Tile) -> tuple[Tile, Callable]:
+    blk = tile.resolved_block()
+    halo = tile.resolved_halo()
+    nb = tuple(s // b for s, b in zip(tile.shape, blk))
+    wblk = tile.body_block()
+    wshape = tuple(n * w for n, w in zip(nb, wblk))
+    takes = [(d, jnp.asarray(_halo_axis_index(n, b, r, s, tile.wrap),
+                             dtype=jnp.int32))
+             for d, (n, b, r, s) in enumerate(zip(nb, blk, halo, tile.shape))
+             if r]
+
+    def windowize(arr):
+        for d, idx in takes:
+            arr = jnp.take(arr, idx, axis=d)
+        return arr
+
+    lowered = dataclasses.replace(
+        tile, shape=wshape, block=wblk, halo=None)
+    return lowered, windowize
+
+
+def _lower_halos(spec: Spec) -> tuple[Spec, list | None]:
+    """(lowered spec, per-input window fns) — (spec, None) when halo-free."""
+    if not any(t.halo is not None and any(t.resolved_halo())
+               for t in spec.inputs):
+        return spec, None
+    preps, inputs = [], []
+    for t in spec.inputs:
+        if t.halo is not None and any(t.resolved_halo()):
+            lowered, prep = _lower_halo_tile(t)
+        else:
+            lowered, prep = t, None
+        inputs.append(lowered)
+        preps.append(prep)
+    lowered = dataclasses.replace(spec, inputs=inputs)
+    return lowered, preps
+
+
+# ---------------------------------------------------------------------------
 # Backend expansions
 # ---------------------------------------------------------------------------
 
@@ -681,6 +786,37 @@ def _expand_jnp(spec: Spec, defines: SimpleNamespace):
     return fn
 
 
+def _expand_single_cell(spec: Spec, defines: SimpleNamespace, backend: str):
+    """Degenerate grid (one cell): run the body once, directly on the full
+    arrays — no vmap, no fori_loop, no dynamic slicing. The jnp and loops
+    expansions collapse to the same program here, and the removed machinery
+    is pure overhead at exactly the shapes where it matters most (a block
+    sized to the whole problem, the autotuner's frequent small-shape winner)."""
+    grid = spec.grid
+    gids = (0,) * len(grid)
+
+    def fn(*in_arrays):
+        ins = [_slice_tile(t, a, gids, grid)
+               for t, a in zip(spec.inputs, in_arrays)]
+        out0 = tuple(jnp.zeros(t.resolved_block(), t.dtype)
+                     for t in spec.outputs)
+        scr0 = tuple(jnp.zeros(s.shape, s.dtype) for s in spec.scratch)
+        out_vals, _ = _run_body(spec, backend, defines, gids, ins, out0, scr0)
+        results = []
+        for t, v in zip(spec.outputs, out_vals):
+            blk = t.resolved_block()
+            if blk == tuple(t.shape):
+                results.append(v)
+            else:
+                bidx = t.resolved_index(grid)(*gids)
+                starts = [int(i) * b for i, b in zip(bidx, blk)]
+                results.append(lax.dynamic_update_slice(
+                    jnp.zeros(t.shape, t.dtype), v, starts))
+        return tuple(results)
+
+    return fn
+
+
 def _expand_loops(spec: Spec, defines: SimpleNamespace):
     grid = spec.grid
     ncells = math.prod(grid)
@@ -768,10 +904,23 @@ def _expand_pallas(spec: Spec, defines: SimpleNamespace, interpret: bool):
 
 def expand(spec: Spec, defines: SimpleNamespace, backend: str, *, interpret: bool = True):
     """Expand one kernel Spec for a backend (the run-time 'macro expansion')."""
-    if backend == "jnp":
-        return _expand_jnp(spec, defines)
-    if backend == "loops":
-        return _expand_loops(spec, defines)
-    if backend == "pallas":
-        return _expand_pallas(spec, defines, interpret)
-    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    spec, preps = _lower_halos(spec)
+    if backend in ("jnp", "loops") and math.prod(spec.grid) == 1:
+        inner = _expand_single_cell(spec, defines, backend)
+    elif backend == "jnp":
+        inner = _expand_jnp(spec, defines)
+    elif backend == "loops":
+        inner = _expand_loops(spec, defines)
+    elif backend == "pallas":
+        inner = _expand_pallas(spec, defines, interpret)
+    else:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if preps is None:
+        return inner
+
+    def fn(*in_arrays):
+        return inner(*(a if p is None else p(a)
+                       for p, a in zip(preps, in_arrays)))
+
+    return fn

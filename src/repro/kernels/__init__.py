@@ -13,4 +13,4 @@ the unified kernel language
 on any bespoke Pallas call site under this package.
 """
 
-from . import flash_attention, lm_head, matmul, rmsnorm, ssm_scan  # noqa: F401
+from . import apps, flash_attention, lm_head, matmul, rmsnorm, ssm_scan  # noqa: F401

@@ -1,0 +1,5 @@
+"""Paper-workload ops (FD/SEM/DG) as first-class ``define_op`` citizens."""
+
+from .ops import dg_surface, dg_volume, fd2d, sem_apply
+
+__all__ = ["fd2d", "sem_apply", "dg_volume", "dg_surface"]

@@ -1,0 +1,184 @@
+"""The paper's three benchmark workloads as ``define_op`` declarations.
+
+OCCA's headline results are finite-difference, spectral-element and
+discontinuous-Galerkin kernels; here each one is a registered op over the
+unified kernel language — oracle-validated, statically analyzed, autotunable
+with persisted winners — instead of a bespoke driver-only code path:
+
+  ``fd2d``        one leapfrog step of the §4.1 acoustic wave stencil
+                  (halo input tile; tuned over 2-D ``(bh, bw)`` blocks)
+  ``sem_apply``   the §4.2 screened-Coulomb SEM operator on local dofs
+                  (tuned over elements-per-block ``eb``)
+  ``dg_volume``   the §4.3 DG shallow-water volume RHS        (tuned ``eb``)
+  ``dg_surface``  the DG surface-flux RHS (Lax-Friedrichs + LIFT) on
+                  pre-gathered face traces                    (tuned ``eb``)
+
+The app drivers (``repro.apps``) run THROUGH these ops, adopting persisted
+autotune winners the same way serving adopts LM-kernel winners.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.dg_swe import (
+    GRAV, dg_surface_builder, dg_volume_builder, surface_ref, volume_ref)
+from repro.apps.fd2d import fd2d_builder, reference_step
+from repro.apps.sem import apply_ref, sem_builder
+from repro.core import define_op, fit_block, oracle_vjp
+
+__all__ = ["fd2d", "sem_apply", "dg_volume", "dg_surface"]
+
+
+# ---------------------------------------------------------------------------
+# fd2d — §4.1 finite-difference wave step
+# ---------------------------------------------------------------------------
+
+def _fd_defines(args, params):
+    u1, u2 = args
+    h, w = u1.shape
+    weights = tuple(float(x) for x in params["weights"])
+    return dict(w=w, h=h, r=(len(weights) - 1) // 2, weights=weights,
+                dt=float(params["dt"]), dx=float(params["dx"]),
+                bh=fit_block(params["bh"], h), bw=fit_block(params["bw"], w),
+                dtype=jnp.dtype(u1.dtype).name)
+
+
+def _fd_example(rng):
+    u1 = rng.standard_normal((32, 32)).astype("float32")
+    u2 = rng.standard_normal((32, 32)).astype("float32")
+    return (u1, u2), dict(weights=(1.0, -2.0, 1.0), dx=2.0 / 32, dt=0.02,
+                          bh=16, bw=32)
+
+
+fd2d = define_op(
+    "fd2d",
+    builder=fd2d_builder,
+    ref=reference_step,
+    derive_defines=_fd_defines,
+    vjp=oracle_vjp(reference_step, params=("weights", "dx", "dt")),
+    defaults=dict(weights=(1.0, -2.0, 1.0), dx=1.0, dt=0.1, bh=32, bw=256),
+    ref_params=("weights", "dx", "dt"),
+    sweep=dict(bh=[8, 16, 32, 64, 128], bw=[32, 64, 128, 256]),
+    example=_fd_example,
+    doc="""One leapfrog step: u3 = 2 u1 - u2 + dt^2 (u_xx + u_yy).
+
+    ``u1``/``u2``: (h, w) fields at t_n / t_{n-1}; ``weights`` the order-2r
+    central second-derivative stencil. Periodic boundaries via the kernel
+    language's halo tiles — each grid cell reads only its
+    ``(bh + 2r, bw + 2r)`` window, never the whole field.""",
+)
+
+
+# ---------------------------------------------------------------------------
+# sem_apply — §4.2 spectral-element operator
+# ---------------------------------------------------------------------------
+
+def _sem_defines(args, params):
+    u, geo, dmat = args
+    E, nq = u.shape[0], u.shape[1]
+    return dict(E=E, nq=nq, eb=fit_block(params["eb"], E),
+                dtype=jnp.dtype(u.dtype).name)
+
+
+def _sem_example(rng):
+    E, nq = 8, 3
+    u = rng.standard_normal((E, nq, nq, nq)).astype("float32")
+    geo = rng.standard_normal((E, 7, nq, nq, nq)).astype("float32")
+    dmat = rng.standard_normal((nq, nq)).astype("float32")
+    return (u, geo, dmat), dict(eb=4)
+
+
+sem_apply = define_op(
+    "sem_apply",
+    builder=sem_builder,
+    ref=apply_ref,
+    derive_defines=_sem_defines,
+    vjp=oracle_vjp(apply_ref),
+    defaults=dict(eb=32),
+    sweep=dict(eb=[1, 2, 4, 8, 16, 32, 64]),
+    example=_sem_example,
+    doc="""A u = K u + alpha M u on local dofs: ``u`` (E, nq, nq, nq),
+    ``geo`` (E, 7, nq, nq, nq) symmetric geometric factors, ``dmat``
+    (nq, nq) the 1-D GLL derivative matrix (a whole-array shared tile).""",
+)
+
+
+# ---------------------------------------------------------------------------
+# dg_volume / dg_surface — §4.3 DG shallow-water RHS
+# ---------------------------------------------------------------------------
+
+def _dgv_defines(args, params):
+    q, geom, db, dr, ds = args
+    E, np_ = q.shape[0], q.shape[1]
+    return dict(E=E, np_=np_, eb=fit_block(params["eb"], E),
+                g=float(params["g"]), dtype=jnp.dtype(q.dtype).name)
+
+
+def _dgv_example(rng):
+    E, np_ = 16, 6
+    q = rng.standard_normal((E, np_, 3)).astype("float32") * 0.1
+    q[..., 0] += 1.5                          # positive water height
+    geom = rng.standard_normal((E, 4)).astype("float32")
+    db = rng.standard_normal((E, np_, 2)).astype("float32")
+    dr = rng.standard_normal((np_, np_)).astype("float32")
+    ds = rng.standard_normal((np_, np_)).astype("float32")
+    return (q, geom, db, dr, ds), dict(eb=4)
+
+
+dg_volume = define_op(
+    "dg_volume",
+    builder=dg_volume_builder,
+    ref=volume_ref,
+    derive_defines=_dgv_defines,
+    vjp=oracle_vjp(volume_ref, params=("g",)),
+    defaults=dict(g=GRAV, eb=64),
+    ref_params=("g",),
+    sweep=dict(eb=[1, 2, 4, 8, 16, 32, 64]),
+    example=_dgv_example,
+    doc="""DG SWE volume RHS: -(dF/dx + dG/dy) + S on nodal triangles.
+    ``q`` (E, np, 3) conserved variables, ``geom`` (E, 4) affine factors,
+    ``db`` (E, np, 2) bathymetry gradients, ``dr``/``ds`` shared (np, np)
+    derivative matrices.""",
+)
+
+
+def _dgs_defines(args, params):
+    qm, qp, nrm, lift = args
+    E, nfp3 = qm.shape[0], qm.shape[1]
+    return dict(E=E, np_=lift.shape[0], nfp3=nfp3,
+                eb=fit_block(params["eb"], E), g=float(params["g"]),
+                dtype=jnp.dtype(qm.dtype).name)
+
+
+def _dgs_example(rng):
+    E, np_, nfp3 = 16, 6, 9
+    qm = rng.standard_normal((E, nfp3, 3)).astype("float32") * 0.1
+    qp = rng.standard_normal((E, nfp3, 3)).astype("float32") * 0.1
+    qm[..., 0] += 1.5
+    qp[..., 0] += 1.5
+    theta = rng.standard_normal((E, nfp3)).astype("float32")
+    nrm = np.stack([np.cos(theta), np.sin(theta),
+                    np.abs(rng.standard_normal((E, nfp3))).astype("float32")],
+                   axis=-1).astype("float32")
+    lift = rng.standard_normal((np_, nfp3)).astype("float32")
+    return (qm, qp, nrm, lift), dict(eb=4)
+
+
+dg_surface = define_op(
+    "dg_surface",
+    builder=dg_surface_builder,
+    ref=surface_ref,
+    derive_defines=_dgs_defines,
+    vjp=oracle_vjp(surface_ref, params=("g",)),
+    defaults=dict(g=GRAV, eb=64),
+    ref_params=("g",),
+    sweep=dict(eb=[1, 2, 4, 8, 16, 32, 64]),
+    example=_dgs_example,
+    doc="""DG SWE surface RHS: local Lax-Friedrichs flux on pre-gathered
+    face traces ``qm``/``qp`` (E, 3nfp, 3) lifted to volume nodes.
+    ``nrm`` (E, 3nfp, 3) packs (nx, ny, fscale); ``lift`` (np, 3nfp) is
+    the shared LIFT matrix. The face gather (the 'communication') stays
+    outside the kernel — GPU-DG practice.""",
+)

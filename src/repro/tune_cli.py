@@ -12,6 +12,10 @@ free at warmup (``apply_tuned_winners`` — a pure cache lookup, zero builds).
   # one op on its example shapes (a smoke-sized sweep)
   PYTHONPATH=src python -m repro.tune_cli --op matmul --backend jnp
 
+  # the paper's app workloads (fd2d / sem_apply / dg_volume / dg_surface)
+  # at the benchmark smoke shapes — the drivers then adopt the winners
+  PYTHONPATH=src python -m repro.tune_cli --apps
+
   # what is tunable
   PYTHONPATH=src python -m repro.tune_cli --list
 
@@ -59,6 +63,50 @@ def _tune_probe(op, args, params, *, backend, repeats, cache):
             over = {k: cand[k] for k in sorted(op.sweep)}
             print(f"[tune]   pruned {over}: {reason}")
     return winner
+
+
+def _app_probes():
+    """(op name, real args, params) probes for the paper's app workloads at
+    the benchmark smoke shapes — built THROUGH the drivers, so the tuned
+    cache keys are exactly the (shape, dtype, param) tuples the drivers'
+    ``cached_winner`` lookups produce at construction time."""
+    from repro.apps import dg_swe, sem
+    from repro.apps import fd2d as fd_app
+
+    rng = np.random.RandomState(0)
+    app = fd_app.FDWave(model="jnp", width=32, height=32, radius=1)
+    yield ("fd2d", (app.o_u1.data, app.o_u2.data),
+           dict(weights=app.weights, dx=float(app.dx), dt=float(app.dt)))
+    for n in (1, 2):
+        nq = n + 1
+        op = sem.SEMOperator(model="jnp", ex=2, ey=2, ez=2, n=n, deform=0.1)
+        u = jnp.asarray(rng.standard_normal((op.E, nq, nq, nq)), jnp.float32)
+        yield ("sem_apply", (u, op.o_geo.data, op.o_dmat.data), {})
+        vol = dg_swe.DGVolume(model="jnp", nx=4, ny=4, n=n, jitter=0.1)
+        Q = jnp.asarray(np.stack([
+            2.0 + 0.1 * rng.standard_normal((vol.E, vol.np_)),
+            0.3 * rng.standard_normal((vol.E, vol.np_)),
+            0.3 * rng.standard_normal((vol.E, vol.np_))], -1), jnp.float32)
+        yield ("dg_volume", (Q, vol.o_geom.data, vol.o_db.data,
+                             vol.o_dr.data, vol.o_ds.data), {})
+        sol = dg_swe.SWESolver(model="jnp", nx=4, ny=4, n=n, jitter=0.0)
+        Qf = Q.reshape(sol.E * sol.np_, 3)
+        yield ("dg_surface", (Qf[sol.vmapM], Qf[sol.vmapP],
+                              sol.o_nrm.data, sol.o_lift.data), {})
+
+
+def _tune_apps(ops, *, backend, repeats, cache) -> int:
+    backends = (("jnp", "loops", "pallas") if backend == "auto" else (backend,))
+    probes = list(_app_probes())
+    for be in backends:
+        print(f"[tune] apps backend={be}")
+        for name, arrays, params in probes:
+            try:
+                _tune_probe(ops[name], arrays, params, backend=be,
+                            repeats=repeats, cache=cache)
+            except ValueError as e:
+                print(f"[tune] {name}: skipped ({e})")
+    return 0
 
 
 def _lint_cache(ops, *, evict: bool) -> int:
@@ -134,6 +182,10 @@ def main(argv=None):
                     help="with --lint: delete the flagged cache entries")
     ap.add_argument("--op", default=None,
                     help="tune ONE op on its declared example shapes")
+    ap.add_argument("--apps", action="store_true",
+                    help="tune the paper's app workloads (fd2d, sem_apply, "
+                         "dg_volume, dg_surface) at the benchmark smoke "
+                         "shapes; --backend auto sweeps jnp+loops+pallas")
     ap.add_argument("--arch", default=None,
                     help="tune every op a serving+training deployment of "
                          "this arch hits (repro.launch.tuning probe shapes)")
@@ -181,6 +233,9 @@ def main(argv=None):
         return 0
 
     cache = not args.no_cache
+    if args.apps:
+        return _tune_apps(ops, backend=args.backend, repeats=args.repeats,
+                          cache=cache)
     if args.op is not None:
         op = ops.get(args.op)
         if op is None:

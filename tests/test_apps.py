@@ -171,3 +171,27 @@ def test_swe_surface_kernel_backend_equivalence(backend):
                               0.1 * rng.randn(ref.E, ref.np_)], -1), jnp.float32)
     np.testing.assert_allclose(np.asarray(got.rhs(Q)), np.asarray(ref.rhs(Q)),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# autotune adoption: `tune_cli --apps` probes share cache keys with drivers
+# ---------------------------------------------------------------------------
+
+def test_tune_apps_winner_adopted_by_sem_driver(tmp_path, monkeypatch):
+    """The --apps probe and SEMOperator construction must produce the SAME
+    tuning-problem cache key: a winner persisted from the probe is adopted
+    by the next driver build (eb=None). The sweep is pinned to one candidate
+    that differs from the fitted default, so adoption is observable."""
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    from repro.kernels.apps import sem_apply as sem_op
+    from repro.tune_cli import _app_probes
+
+    name, arrays, params = next(p for p in _app_probes()
+                                if p[0] == "sem_apply")
+    monkeypatch.setattr(sem_op, "sweep", dict(eb=[2]))
+    r = sem_op.tune(arrays, backend="jnp", repeats=1, **params)
+    assert r["eb"] == 2 and not r.cached
+    tuned = sem.SEMOperator(model="jnp", ex=2, ey=2, ez=2, n=1, deform=0.1)
+    assert tuned.eb == 2          # adopted the persisted winner, not E-fitted
+    untuned = sem.SEMOperator(model="loops", ex=2, ey=2, ez=2, n=1, deform=0.1)
+    assert untuned.eb == 8        # other backend: cache miss, default fit
