@@ -26,10 +26,11 @@ def _cost_rows(rows):
         c = cost_op(op, np.random.RandomState(0))
         k = c["kernels"][0]
         fl = "?" if k["flops"] is None else str(k["flops"])
+        comm = (f"comm={k['comm_bytes']}B; " if k.get("comm_bytes") else "")
         rows.append(Row(
             f"cost/{name}", 0.0,
             f"vmem={k['vmem_bytes']}B ({k['vmem_frac']:.0%} budget); "
-            f"hbm={k['hbm_bytes']}B; flops={fl}; "
+            f"hbm={k['hbm_bytes']}B; flops={fl}; {comm}"
             f"pruned={len(c['sweep_pruned'])}/"
             f"{len(c['sweep_pruned']) + c['sweep_kept']}"))
     return rows

@@ -10,8 +10,10 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core import BACKENDS
+from repro.core import BACKENDS, estimate_cost
+from repro.core.lang import defines_namespace
 from repro.kernels.flash_attention import (decode_attention, flash_attention,
+                                           ring_flash, ring_flash_attention,
                                            rolling_slot_pos)
 from repro.kernels.lm_head import lm_head_ce, lm_head_logits
 from repro.kernels.matmul import matmul
@@ -78,6 +80,27 @@ def run(rows, smoke: bool = False):
         rows.append(Row(f"unified/flash_bwd/{backend}", sec,
                         f"s={s2} bq=bkv={bq} "
                         f"gflops={bfl / sec / 1e9:.1f}"))
+
+    # RING flash attention: the declared shard schedule in its local
+    # single-process form — the SAME per-step kernel + exact merge the
+    # shard_map ring runs, over ring_steps locally-split kv chunks (bit-
+    # comparable to the mesh run). comm_B is the static cost model's
+    # per-shard interconnect estimate for the mesh-extended spec.
+    steps = 4
+    s_loc = s2 // steps
+    _, _, rp = ring_flash._resolve(dict(causal=True, block_q=bq, block_kv=bq,
+                                        ring_steps=steps))
+    _, rdef, _ = ring_flash._prepare(
+        (q[:, :, :s_loc], kk[:, :, :s_loc], vv[:, :, :s_loc]), rp)
+    rD = defines_namespace(rdef)
+    comm = estimate_cost(ring_flash.builder(rD), rD).comm_bytes
+    for backend in BACKENDS:
+        sec = time_fn(lambda q_, k_, v_, be=backend: ring_flash_attention(
+            q_, k_, v_, ring_steps=steps, causal=True, block_q=bq,
+            block_kv=bq, backend=be), q, kk, vv, **tkw)
+        rows.append(Row(f"unified/ring_flash/{backend}", sec,
+                        f"s={s2} steps={steps} comm_B={comm} "
+                        f"gflops={afl / sec / 1e9:.1f}"))
 
     # flash DECODE: one query token vs the kv cache (dynamic kv_len)
     q1 = q[:, :, :1]

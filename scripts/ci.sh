@@ -17,6 +17,10 @@
 #   matrix   backend matrix: the cross-backend agreement suites re-run under
 #            REPRO_BACKEND=jnp and REPRO_BACKEND=loops, so a regression in a
 #            non-default expansion can't hide behind "auto" = pallas
+#   mesh     shard-aware language: the mesh/ring suite re-run with XLA
+#            forced to 8 host devices (the in-process mesh8 fixtures stop
+#            skipping and exercise the real shard_map ring), plus the strict
+#            analyzer over the mesh-bound ring specs
 #   bench    benchmark smoke (tiny shapes, one rep) writing
 #            artifacts/bench_smoke.json, then the row-manifest check — a
 #            benchmark row disappearing fails the build — and the perf gate
@@ -32,7 +36,7 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
-STAGES="deps guards analyze tests matrix bench"
+STAGES="deps guards analyze tests matrix mesh bench"
 if [[ "${1:-}" == "--stage" ]]; then
     [[ $# -ge 2 ]] || { echo "ci.sh: --stage needs a name (one of: $STAGES)" >&2; exit 2; }
     STAGES="$2"
@@ -95,6 +99,17 @@ stage_matrix() {
     done
 }
 
+stage_mesh() {
+    # 8 simulated host devices (must be set before jax imports, hence a
+    # fresh pytest process): the mesh8 in-process tests run for real here
+    # and the subprocess parity tests re-run under the same forced count.
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        python -m pytest -x -q tests/test_mesh_shard.py
+    # the shard-aware specs (declared collectives, comm costs) stay clean
+    # under the strict analyzer
+    python -m repro.lint_kernels --strict --cost --op ring_flash
+}
+
 stage_bench() {
     mkdir -p artifacts
     python -m benchmarks.run --smoke --out artifacts/bench_smoke.json \
@@ -107,8 +122,8 @@ stage_bench() {
 
 for stage in $STAGES; do
     case "$stage" in
-        deps|guards|analyze|tests|matrix|bench) ;;
-        *) echo "ci.sh: unknown stage '$stage' (one of: deps guards analyze tests matrix bench)" >&2
+        deps|guards|analyze|tests|matrix|mesh|bench) ;;
+        *) echo "ci.sh: unknown stage '$stage' (one of: deps guards analyze tests matrix mesh bench)" >&2
            exit 2 ;;
     esac
     echo "ci.sh: stage $stage ..."

@@ -5,7 +5,8 @@ One kernel source expands at run time to three backends (``jnp``, ``loops``,
 adapted to JAX/TPU. See DESIGN.md §2 for the keyword-by-keyword mapping.
 """
 
-from .lang import BACKENDS, Ctx, Scratch, Spec, Tile, TileRef, cdiv, expand
+from .lang import (BACKENDS, Ctx, Scratch, ShardAxis, Spec, Tile, TileRef,
+                   cdiv, expand)
 from .analyze import (ANALYZE_MODES, AnalysisError, AnalysisWarning,
                       CostReport, Finding, Report, analysis_mode,
                       analyze_spec, estimate_cost, estimate_flops,
@@ -13,7 +14,8 @@ from .analyze import (ANALYZE_MODES, AnalysisError, AnalysisWarning,
 from .device import Device, BuildStats, default_device, fit_block
 from .kernel import Kernel
 from .memory import Memory
-from .op import Op, OpVJP, define_op, get_op, oracle_vjp, registered_ops
+from .op import (Op, OpShard, OpVJP, define_op, get_op, oracle_vjp,
+                 registered_ops)
 from .tune import (SCHEMA_VERSION, TuneResult, autotune, cached_winner,
                    prune_candidates, tune_cache_dir, tune_cache_key)
 
@@ -30,10 +32,12 @@ __all__ = [
     "Kernel",
     "Memory",
     "Op",
+    "OpShard",
     "OpVJP",
     "Report",
     "SCHEMA_VERSION",
     "Scratch",
+    "ShardAxis",
     "Spec",
     "Tile",
     "TileRef",

@@ -87,6 +87,7 @@ __all__ = [
     "check_built_spec",
     "check_grid_invariants",
     "check_semantics",
+    "check_shard_binding",
     "estimate_cost",
     "estimate_flops",
     "set_analysis_mode",
@@ -111,6 +112,9 @@ SEVERITY = {
     "SEMANTICS_PARALLEL_CARRIED": "error",
     "COVERAGE_SKIP_NO_INIT": "coverage",
     "TRACE_INCOMPLETE": "coverage",
+    # -- mesh-extended grid (ShardAxis bindings) --
+    "RACE_MESH_WRITE": "error",
+    "COLLECTIVE_UNDECLARED": "error",
     # -- static cost model (performance findings) --
     "VMEM_OVERFLOW": "error",
     "FOOTPRINT_NEAR_LIMIT": "coverage",
@@ -336,7 +340,62 @@ def check_grid_invariants(spec):
                 f"{nblocks} exist; kernel would leave garbage"))
             return findings, input_reduce_invariant
 
+    findings.extend(check_shard_binding(spec))
     return findings, input_reduce_invariant
+
+
+def check_shard_binding(spec):
+    """Cross-shard semantics of a ShardAxis binding over the MESH-EXTENDED
+    grid: the local grid replicated ``extent`` times along the bound reduce
+    axis, one replica per device.
+
+    Two hazards a single-shard walk cannot see:
+
+    * an output that ACCUMULATES over the bound axis holds a per-shard
+      partial — without a declared collective the partials never meet and
+      every shard silently returns a different wrong answer
+      (``COLLECTIVE_UNDECLARED``);
+    * an output whose index map SELECTS along the bound axis (a slot axis)
+      writes blocks owned by other shards as data rotates — every shard
+      writes the same local block coordinates, which is a write race over the
+      extended grid unless the output is declared shard-resident
+      (``sharded_outputs``), i.e. its partials ride the declared collective
+      home (``RACE_MESH_WRITE``).
+    """
+    sh = getattr(spec, "shard", None)
+    if sh is None or sh.extent <= 1:
+        return []
+    findings = []
+    if sh.collective == "ppermute" and not sh.rotate:
+        findings.append(Finding(
+            "COLLECTIVE_UNDECLARED", spec.name, "",
+            f"shard axis {sh.axis} on mesh axis {sh.mesh_axis!r} declares a "
+            "ppermute ring but rotates no input tiles — no data ever "
+            "crosses shards, so the ring reduces over the same local chunk "
+            f"{sh.extent} times"))
+    for t in spec.outputs:
+        acc = spec.output_reduce_axes(t)
+        if sh.axis in acc:
+            if sh.collective is None:
+                findings.append(Finding(
+                    "COLLECTIVE_UNDECLARED", spec.name, t.name,
+                    f"output tile {t.name!r} accumulates over shard axis "
+                    f"{sh.axis} ({sh.extent} shards on mesh axis "
+                    f"{sh.mesh_axis!r}) but the binding declares no "
+                    "collective — per-shard partials would never be "
+                    "combined"))
+        elif sh.axis in spec.output_slot_axes(t):
+            if t.name not in sh.sharded_outputs:
+                findings.append(Finding(
+                    "RACE_MESH_WRITE", spec.name, t.name,
+                    f"output tile {t.name!r} selects blocks along shard "
+                    f"axis {sh.axis}: all {sh.extent} shards on mesh axis "
+                    f"{sh.mesh_axis!r} write the same local block "
+                    "coordinates for different chunks of the data — a "
+                    "cross-shard write race unless the output is declared "
+                    "in ShardAxis.sharded_outputs (partials ride the "
+                    "collective back to their owner)"))
+    return findings
 
 
 def check_semantics(spec):
@@ -1092,6 +1151,12 @@ class CostReport:
     bytes_out: int
     flops: int | None
     findings: list
+    # Interconnect traffic of the declared ShardAxis binding: bytes each
+    # shard puts on the wire across the whole schedule (all ring steps /
+    # the full allreduce), per tile in comm_detail. 0 when the spec has no
+    # active mesh binding.
+    comm_bytes: int = 0
+    comm_detail: dict = dataclasses.field(default_factory=dict)
 
     @property
     def hbm_bytes(self) -> int:
@@ -1115,7 +1180,9 @@ class CostReport:
                 f"({self.vmem_frac:.0%} of budget), hbm {self.hbm_bytes:,} B "
                 f"(in {self.bytes_in:,} / out {self.bytes_out:,}), "
                 f"flops {fl}"
-                + (f", intensity {ai:.2f} flop/B" if ai is not None else ""))
+                + (f", intensity {ai:.2f} flop/B" if ai is not None else "")
+                + (f", comm {self.comm_bytes:,} B/shard"
+                   if self.comm_bytes else ""))
 
 
 def estimate_cost(spec, defines=None, *, budget=None,
@@ -1144,11 +1211,44 @@ def estimate_cost(spec, defines=None, *, budget=None,
             ncells * math.prod(t.resolved_block()) * _itemsize(t.dtype)
             for t in spec.outputs)
     fl = estimate_flops(spec, defines) if flops else None
+    comm, comm_detail = _comm_costs(spec)
     return CostReport(
         spec=spec.name, grid=tuple(spec.grid), cells=ncells,
         vmem_bytes=vmem, vmem_detail=detail, vmem_budget=budget,
         bytes_in=int(bytes_in), bytes_out=int(bytes_out), flops=fl,
-        findings=findings)
+        findings=findings, comm_bytes=comm, comm_detail=comm_detail)
+
+
+def _comm_costs(spec):
+    """Per-shard interconnect bytes of the declared ShardAxis binding over
+    the whole schedule. Tile shapes in a mesh-bound spec are already the
+    per-shard (local) shapes, so each term is local-array bytes times the
+    hop count of the declared collective:
+
+      ppermute       every rotated input hops extent-1 times (one hop per
+                     ring step after the first); sharded outputs' partials
+                     ride the same ring home — another extent-1 hops each
+      psum           ring allreduce: 2*(n-1)/n of the array per shard
+      psum_scatter   reduce-scatter half of the above: (n-1)/n
+    """
+    sh = getattr(spec, "shard", None)
+    if sh is None or sh.extent <= 1:
+        return 0, {}
+    n = sh.extent
+    detail: dict[str, int] = {}
+    tiles = {t.name: t for t in spec.inputs + spec.outputs}
+    if sh.collective == "ppermute":
+        for name in (*sh.rotate, *sh.sharded_outputs):
+            t = tiles[name]
+            b = (n - 1) * math.prod(t.shape) * _itemsize(t.dtype)
+            detail[name] = detail.get(name, 0) + b
+    elif sh.collective in ("psum", "psum_scatter"):
+        hops = 2 * (n - 1) / n if sh.collective == "psum" else (n - 1) / n
+        for t in spec.outputs:
+            if sh.axis in spec.output_reduce_axes(t):
+                b = math.prod(t.shape) * _itemsize(t.dtype)
+                detail[t.name] = int(round(hops * b))
+    return sum(detail.values()), detail
 
 
 # ---------------------------------------------------------------------------

@@ -117,6 +117,7 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = [
     "Tile",
     "Scratch",
+    "ShardAxis",
     "Spec",
     "Ctx",
     "TileRef",
@@ -241,6 +242,62 @@ class Scratch:
         object.__setattr__(self, "shape", tuple(int(s) for s in self.shape))
 
 
+SHARD_COLLECTIVES = (None, "ppermute", "psum", "psum_scatter")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardAxis:
+    """A grid reduce axis that lives ACROSS devices on a named mesh axis.
+
+    The spec's grid stays the per-shard (local) grid; ``extent`` says how many
+    shards the bound reduce axis spans, and ``collective`` declares how the
+    per-shard partials meet:
+
+      ``"ppermute"``      ring schedule — the ``rotate`` input tiles hop to the
+                          next shard after each ring step (ring attention's
+                          k/v), so every shard eventually reduces over the full
+                          axis. Outputs that do NOT accumulate over the bound
+                          axis (it is one of their slot axes) write per-chunk
+                          blocks owned by a *different* shard each step and
+                          must be declared in ``sharded_outputs`` (their
+                          cotangents/partials ride the ring home).
+      ``"psum"``          every shard reduces its local slice, partials meet in
+                          an all-reduce (the sharded-matmul pattern).
+      ``"psum_scatter"``  as psum, but each shard keeps only its slice of the
+                          result.
+      ``None``            declared distribution with no collective — only legal
+                          when nothing crosses shards (the analyzer rejects
+                          accumulating outputs with COLLECTIVE_UNDECLARED).
+
+    Structural validation happens in ``Spec.__post_init__``; the semantic
+    cross-shard checks (write races over the mesh-extended grid, undeclared
+    collectives) live in ``core.analyze.check_shard_binding`` and fail the
+    build with stable finding codes (RACE_MESH_WRITE, COLLECTIVE_UNDECLARED).
+    """
+
+    mesh_axis: str
+    axis: int
+    extent: int = 1
+    collective: str | None = "ppermute"
+    rotate: tuple[str, ...] = ()
+    sharded_outputs: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "axis", int(self.axis))
+        object.__setattr__(self, "extent", int(self.extent))
+        object.__setattr__(self, "rotate", tuple(self.rotate))
+        object.__setattr__(self, "sharded_outputs",
+                           tuple(self.sharded_outputs))
+        if not self.mesh_axis or not isinstance(self.mesh_axis, str):
+            raise ValueError("ShardAxis.mesh_axis must be a mesh axis name")
+        if self.extent < 1:
+            raise ValueError(f"ShardAxis.extent must be >= 1, got {self.extent}")
+        if self.collective not in SHARD_COLLECTIVES:
+            raise ValueError(
+                f"ShardAxis.collective {self.collective!r} unknown "
+                f"(one of {SHARD_COLLECTIVES})")
+
+
 @dataclasses.dataclass
 class Spec:
     """A built kernel: grid + tiles + body. Produced by a builder(D) call.
@@ -261,6 +318,11 @@ class Spec:
     # arbitrary. The analyzer rejects a "parallel" reduce axis that carries
     # scratch or an output accumulation (SEMANTICS_PARALLEL_CARRIED).
     dimension_semantics: tuple[str, ...] | None = None
+    # Declared mesh binding: one reduce axis distributed across devices with
+    # a named collective (see ShardAxis). The grid stays per-shard; the
+    # analyzer extends its race/coverage/cost reasoning over
+    # extent-many shards when the binding is active (extent > 1).
+    shard: ShardAxis | None = None
 
     def __post_init__(self):
         self.grid = tuple(int(g) for g in self.grid)
@@ -313,6 +375,32 @@ class Spec:
                 raise ValueError(
                     f"output tile {t.name!r}: halo= is input-only "
                     "(overlapping output windows would write racily)")
+
+        if self.shard is not None:
+            # Structural shard-binding checks; the semantic cross-shard pass
+            # (races / undeclared collectives over the mesh-extended grid)
+            # runs in check_grid_invariants below.
+            sh = self.shard
+            if not isinstance(sh, ShardAxis):
+                raise TypeError(
+                    f"Spec.shard must be a lang.ShardAxis, got {type(sh)}")
+            if sh.axis not in self.reduce_axes:
+                raise ValueError(
+                    f"kernel {self.name!r}: shard axis {sh.axis} is not a "
+                    f"reduce axis {self.reduce_axes} — only sequential "
+                    "(reduce) grid axes can be distributed across the mesh")
+            in_names = {t.name for t in self.inputs}
+            out_names = {t.name for t in self.outputs}
+            unknown = set(sh.rotate) - in_names
+            if unknown:
+                raise ValueError(
+                    f"kernel {self.name!r}: ShardAxis.rotate names unknown "
+                    f"input tiles {sorted(unknown)}")
+            unknown = set(sh.sharded_outputs) - out_names
+            if unknown:
+                raise ValueError(
+                    f"kernel {self.name!r}: ShardAxis.sharded_outputs names "
+                    f"unknown output tiles {sorted(unknown)}")
 
         # Concrete-grid invariants — non-dividing blocks, out-of-range index
         # maps (inputs AND outputs), parallel-cell write races, accumulated-

@@ -39,7 +39,7 @@ from . import tune as _tune
 from .device import default_device
 from .lang import BACKENDS
 
-__all__ = ["Op", "OpVJP", "define_op", "get_op", "oracle_vjp",
+__all__ = ["Op", "OpShard", "OpVJP", "define_op", "get_op", "oracle_vjp",
            "registered_ops"]
 
 _REGISTRY: dict[str, "Op"] = {}
@@ -90,6 +90,59 @@ def oracle_vjp(ref_fn: Callable, *, params: Sequence[str] = ()) -> OpVJP:
     return OpVJP(bwd=bwd)
 
 
+class OpShard:
+    """Executable mesh schedule for an op whose spec binds a ShardAxis.
+
+    Where ``lang.ShardAxis`` is the spec-level DECLARATION (validated and
+    cost-priced by the analyzer), ``OpShard`` is the op-level SCHEDULE:
+    calling the op with ``mesh=`` wraps it in ``shard_map`` over these specs
+    and drives the declared collective —
+
+      ``"ppermute"``      a ring: ``step`` runs the per-chunk kernel on the
+                          shard's current data, ``merge`` folds its partials
+                          into the accumulator, and the ``rotate`` args hop to
+                          the next shard between steps (``lax.ppermute``).
+                          The whole ring is a static Python loop, so jax
+                          autodiff transposes it for free (cotangents of the
+                          rotated args ride the inverse ring home).
+      ``"psum"`` /        one ``step`` per shard over its local slice, then an
+      ``"psum_scatter"``  all-reduce (or reduce-scatter along
+                          ``scatter_axis``) of the partials.
+
+    ``in_specs(axis, args)`` / ``out_specs(axis)`` produce the shard_map
+    partition specs. ``extent_param`` names an op param to set to the mesh
+    axis size (so derived defines — and therefore the spec's ShardAxis extent
+    and the tune-cache key — track the shard count). ``step`` defaults to the
+    op's public call, which re-resolves ``backend=`` INSIDE shard_map: backend
+    resolution is per-shard, not per-mesh.
+    """
+
+    def __init__(self, *, mesh_axis: str = "model",
+                 collective: str = "ppermute", in_specs: Callable,
+                 out_specs: Callable, rotate: Sequence[int] = (),
+                 extent_param: str | None = None, scatter_axis: int = 0,
+                 step: Callable | None = None, merge: Callable | None = None,
+                 done: Callable | None = None):
+        if collective not in ("ppermute", "psum", "psum_scatter"):
+            raise ValueError(f"OpShard collective {collective!r} unknown")
+        if collective == "ppermute" and (not rotate or merge is None):
+            raise ValueError(
+                "OpShard(collective='ppermute') needs rotate= arg indices "
+                "and a merge= hook — a ring with nothing rotating or no way "
+                "to fold partials cannot reduce across shards")
+        self.mesh_axis = mesh_axis
+        self.collective = collective
+        self.in_specs = in_specs
+        self.out_specs = out_specs
+        self.rotate = tuple(int(i) for i in rotate)
+        self.extent_param = extent_param
+        self.scatter_axis = int(scatter_axis)
+        self.step = step or (
+            lambda op, args, params, *, t, n, axis: op(*args, **params))
+        self.merge = merge
+        self.done = done
+
+
 def _freeze(params: Mapping) -> tuple:
     return tuple(sorted(params.items()))
 
@@ -119,7 +172,7 @@ class Op:
                  sweep=None, defaults=None, public_outputs=None,
                  early=None, pre=None, post=None, ref_params=(),
                  tune_ref=None, example=None, doc=None, array_params=(),
-                 analyze=None):
+                 analyze=None, shard=None):
         self.name = name
         self.builder = builder
         self.ref = ref
@@ -135,6 +188,8 @@ class Op:
         # per-op static-analysis strictness override (None = the process
         # mode: $REPRO_ANALYZE / analyze.set_analysis_mode)
         self.analyze = analyze
+        # declared mesh schedule (OpShard) behind the mesh= call param
+        self.shard = shard
         self._early = early
         self._pre = pre
         self._post = post
@@ -218,7 +273,64 @@ class Op:
         core.defvjp(core_fwd, core_bwd)
         return core
 
+    def _shard_call(self, mesh, args, kw):
+        """Run under ``shard_map`` per the declared :class:`OpShard` schedule.
+
+        The collective loop is traced ONCE for all shards (shard_map's SPMD
+        contract), so per-shard positions must come from ``lax.axis_index``
+        inside the step hook, never from Python. ``check_rep=False``: the ring
+        writes sharded outputs through explicit collectives the replication
+        checker cannot see."""
+        from jax import lax  # deferred: op.py stays import-light
+        from jax.experimental.shard_map import shard_map
+
+        sh = self.shard
+        if sh is None:
+            raise ValueError(
+                f"op {self.name!r} declares no mesh schedule (OpShard); "
+                "mesh= is not supported here")
+        ax = sh.mesh_axis
+        if ax not in dict(getattr(mesh, "shape", {})):
+            raise ValueError(
+                f"op {self.name!r}: mesh has no axis {ax!r} "
+                f"(axes: {tuple(getattr(mesh, 'shape', {}))})")
+        n = int(mesh.shape[ax])
+        params = dict(kw)
+        if sh.extent_param:
+            params.setdefault(sh.extent_param, n)
+
+        def local(*largs):
+            if sh.collective == "ppermute":
+                # ring: at step t, shard i holds chunk (i + t) % n of every
+                # rotated arg; a backward pass through this loop transposes
+                # each ppermute, carrying dk/dv-style cotangents home
+                perm = [(j, (j - 1) % n) for j in range(n)]
+                cur = list(largs)
+                acc = None
+                for t in range(n):
+                    part = sh.step(self, tuple(cur), dict(params),
+                                   t=t, n=n, axis=ax)
+                    acc = part if acc is None else sh.merge(acc, part)
+                    if t + 1 < n:
+                        for i in sh.rotate:
+                            cur[i] = lax.ppermute(cur[i], ax, perm)
+                return sh.done(acc) if sh.done is not None else acc
+            part = sh.step(self, largs, dict(params), t=0, n=n, axis=ax)
+            if sh.collective == "psum":
+                return jax.tree.map(lambda x: lax.psum(x, ax), part)
+            return jax.tree.map(
+                lambda x: lax.psum_scatter(
+                    x, ax, scatter_dimension=sh.scatter_axis, tiled=True),
+                part)
+
+        fn = shard_map(local, mesh=mesh, in_specs=tuple(sh.in_specs(ax, args)),
+                       out_specs=sh.out_specs(ax), check_rep=False)
+        return fn(*args)
+
     def __call__(self, *args, **kw):
+        mesh = kw.pop("mesh", None)
+        if mesh is not None:
+            return self._shard_call(mesh, args, kw)
         backend, interpret, params = self._resolve(kw)
         if self._early is not None:
             got = self._early(args, dict(params))
@@ -315,7 +427,8 @@ def define_op(name: str, *, builder: Callable, ref: Callable | None,
               ref_params: Sequence[str] = (), tune_ref: Callable | None = None,
               example: Callable | None = None, doc: str | None = None,
               array_params: Sequence[str] = (), register: bool = True,
-              analyze: str | None = None) -> Op:
+              analyze: str | None = None,
+              shard: OpShard | None = None) -> Op:
     """Declare a public op over the unified kernel language; see :class:`Op`.
 
     ``example(rng) -> (args, params)`` supplies representative inputs so the
@@ -328,7 +441,7 @@ def define_op(name: str, *, builder: Callable, ref: Callable | None,
             defaults=defaults, public_outputs=public_outputs, early=early,
             pre=pre, post=post, ref_params=ref_params, tune_ref=tune_ref,
             example=example, doc=doc, array_params=array_params,
-            analyze=analyze)
+            analyze=analyze, shard=shard)
     if register:
         # silent overwrites are the same collision class the PR-1 kernel-cache
         # fix eliminated: callers holding the first Op would diverge from the

@@ -1,7 +1,9 @@
 from .ops import (decode_attention, flash_attention, flash_attention_fwd,
                   flash_decode)
 from .ref import decode_ref, mha_chunked, mha_ref, rolling_slot_pos
+from .ring import ring_flash, ring_flash_attention, ring_merge, ring_step_ref
 
 __all__ = ["flash_attention", "flash_attention_fwd", "flash_decode",
            "decode_attention", "mha_ref", "mha_chunked", "decode_ref",
-           "rolling_slot_pos"]
+           "rolling_slot_pos", "ring_flash", "ring_flash_attention",
+           "ring_merge", "ring_step_ref"]

@@ -39,10 +39,11 @@ import math
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import Scratch, Spec, Tile, default_device
+from repro.core import Scratch, ShardAxis, Spec, Tile, default_device
 
 __all__ = ["flash_fwd_builder", "flash_delta_builder", "flash_bwd_builder",
-           "flash_decode_builder", "flash_attention_bwd"]
+           "flash_decode_builder", "flash_attention_bwd",
+           "ring_flash_fwd_builder", "ring_flash_bwd_builder"]
 
 _NEG_INF = float("-inf")
 
@@ -452,3 +453,237 @@ def flash_decode_builder(D):
                  index=lambda b_, h_, ki: (b_, h_, 0, 0)),
         ],
         body=body)
+
+# ---------------------------------------------------------------------------
+# ring attention: one ring step, offsets as dynamic inputs
+# ---------------------------------------------------------------------------
+
+def ring_flash_fwd_builder(D):
+    """One RING STEP of sequence-parallel flash attention.
+
+    Identical online-softmax math to :func:`flash_fwd_builder`, with the
+    static end-of-stream alignment (``q_offset = skv - sq``) replaced by TWO
+    dynamic (1, 1) i32 inputs: ``q_start`` (absolute position of this shard's
+    first query row) and ``k_start`` (absolute position of the kv chunk
+    currently resident — it changes every ring step as chunks rotate). One
+    compiled kernel therefore serves every (shard, step) pair; the causal /
+    window block-skip becomes a data-dependent ``cell_when`` predicate, like
+    flash-decode's ``kv_len`` skip.
+
+    Outputs are the chunk-local softmax (``o`` normalized by the chunk's own
+    ``l``, plus the chunk ``lse``); the host merges steps exactly via the
+    standard logsumexp reweighting. A fully-masked query row yields
+    ``o = 0, lse = -inf`` — the merge's identity element.
+
+    The spec declares its mesh binding: grid axis 3 (the kv-chunk reduce
+    axis) lives across ``ring_steps`` shards of mesh axis ``mesh_axis``, with
+    k/v rotating on a declared ``ppermute`` ring.
+    """
+    b, h, hk = D.b, D.h, D.hk
+    sq, skv, d, dv = D.sq, D.skv, D.d, D.dv
+    bq, bkv = D.block_q, D.block_kv
+    causal, window, prefix = D.causal, D.window, D.prefix_len
+    sm_scale = D.sm_scale
+    g = h // hk
+    dtype = jnp.dtype(D.dtype)
+
+    def body(ctx, q_ref, k_ref, v_ref, qs_ref, ks_ref, o_ref, lse_ref):
+        m_scr, l_scr, acc_scr = ctx.scratch
+        qi = ctx.outer_id(2)
+        ki = ctx.reduce_id(0)
+
+        @ctx.when(ctx.is_first)
+        def _init():
+            m_scr[...] = jnp.full(m_scr.shape, _NEG_INF, jnp.float32)
+            l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+            acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+        q0 = qs_ref[0, 0]
+        k0 = ks_ref[0, 0]
+        # the block-skip of _run_cond, with dynamic absolute offsets
+        run = jnp.bool_(True)
+        if causal:
+            run &= (k0 + ki * bkv) <= (q0 + qi * bq + bq - 1)
+        if window is not None:
+            run &= ((q0 + qi * bq) - (k0 + ki * bkv + bkv - 1)) < window
+        if prefix:
+            run |= (k0 + ki * bkv) < prefix    # prefix keys always visible
+
+        @ctx.cell_when(run)
+        def _step():
+            q_pos = q0 + qi * bq + lax.iota(jnp.int32, bq)
+            k_pos = k0 + ki * bkv + lax.iota(jnp.int32, bkv)
+            q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+            k = k_ref[0, 0].astype(jnp.float32)          # (bkv, d)
+            s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+            mask = _mask_block(q_pos, k_pos, causal=causal, window=window,
+                               prefix_len=prefix)
+            s = jnp.where(mask, s, _NEG_INF)
+            m_prev = m_scr[:, :1]
+            l_prev = l_scr[:, :1]
+            m_cur = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+            corr = jnp.where(m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_cur))
+            p = jnp.exp(jnp.where(mask, s - m_cur, 0.0))
+            p = jnp.where(mask, p, 0.0)
+            v = v_ref[0, 0].astype(jnp.float32)
+            acc_scr[...] = acc_scr[...] * corr + lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            l_scr[:, :1] = l_prev * corr + p.sum(-1, keepdims=True)
+            m_scr[:, :1] = m_cur
+
+        @ctx.when(ctx.is_last)
+        def _fin():
+            l = l_scr[:, :1]
+            o_ref[0, 0] = (acc_scr[...] /
+                           jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+            # lse = -inf for fully-masked rows (m stays -inf, l stays 0):
+            # exactly the merge identity the host combiner expects
+            lse_ref[0, 0] = (m_scr[:, 0] +
+                             jnp.log(jnp.where(l[:, 0] == 0.0, 1.0, l[:, 0])))
+
+    return Spec(
+        "ring_flash_fwd",
+        grid=(b, h, sq // bq, skv // bkv),
+        reduce_axes=(3,),
+        scratch=[Scratch((bq, 128), jnp.float32),   # m
+                 Scratch((bq, 128), jnp.float32),   # l
+                 Scratch((bq, dv), jnp.float32)],   # acc
+        inputs=[
+            Tile("q", (b, h, sq, d), dtype, block=(1, 1, bq, d),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            Tile("k", (b, hk, skv, d), dtype, block=(1, 1, bkv, d),
+                 index=lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+            Tile("v", (b, hk, skv, dv), dtype, block=(1, 1, bkv, dv),
+                 index=lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+            Tile("q_start", (1, 1), jnp.int32),     # whole-array (dynamic)
+            Tile("k_start", (1, 1), jnp.int32),     # whole-array (dynamic)
+        ],
+        outputs=[
+            Tile("o", (b, h, sq, dv), dtype, block=(1, 1, bq, dv),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            Tile("lse", (b, h, sq), jnp.float32, block=(1, 1, bq),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi)),
+        ],
+        body=body,
+        shard=ShardAxis(mesh_axis=D.mesh_axis, axis=3, extent=D.ring_steps,
+                        collective="ppermute", rotate=("k", "v")))
+
+
+def ring_flash_bwd_builder(D):
+    """The backward of ONE ring step (see :func:`flash_bwd_builder`).
+
+    Same fused dq/dk/dv pass with the dynamic ``q_start``/``k_start``
+    offsets, run once per ring step by the host VJP with the step's own lse
+    and an lse-cotangent-adjusted delta (``delta' = delta - g_lse``, since
+    ``ds = p * (dp - delta + g_lse)`` when lse is a public output).
+
+    The mesh binding mirrors the forward's ring and additionally declares
+    ``dk``/``dv`` as shard-resident (grid axis 3 is their SLOT axis — each
+    ring step writes the chunk owned by ANOTHER shard; under autodiff their
+    cotangents ride the transposed ppermute ring home). Without that
+    declaration the analyzer flags RACE_MESH_WRITE.
+    """
+    b, h, hk = D.b, D.h, D.hk
+    sq, skv, d, dv = D.sq, D.skv, D.d, D.dv
+    bq, bkv = D.block_q, D.block_kv
+    causal, window, prefix = D.causal, D.window, D.prefix_len
+    sm_scale = D.sm_scale
+    g = h // hk
+    nq, nk = sq // bq, skv // bkv
+    dtype = jnp.dtype(D.dtype)
+
+    def body(ctx, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+             qs_ref, ks_ref, dq_ref, dk_ref, dv_ref):
+        dq_scr, = ctx.scratch
+        qi = ctx.reduce_id(0)
+        ki = ctx.reduce_id(1)
+
+        @ctx.when(ctx.reduce_first(1))
+        def _init_dq():
+            dq_scr[...] = jnp.zeros(dq_scr.shape, jnp.float32)
+
+        @ctx.when(ctx.reduce_first(0))
+        def _init_dkv():
+            dk_ref[0, 0] = jnp.zeros((bkv, d), jnp.float32)
+            dv_ref[0, 0] = jnp.zeros((bkv, dv), jnp.float32)
+
+        q0 = qs_ref[0, 0]
+        k0 = ks_ref[0, 0]
+        run = jnp.bool_(True)
+        if causal:
+            run &= (k0 + ki * bkv) <= (q0 + qi * bq + bq - 1)
+        if window is not None:
+            run &= ((q0 + qi * bq) - (k0 + ki * bkv + bkv - 1)) < window
+        if prefix:
+            run |= (k0 + ki * bkv) < prefix
+
+        @ctx.cell_when(run)
+        def _step():
+            q = q_ref[0, 0].astype(jnp.float32)
+            k = k_ref[0, 0].astype(jnp.float32)
+            v = v_ref[0, 0].astype(jnp.float32)
+            do = do_ref[0, 0].astype(jnp.float32)
+            lse = lse_ref[0, 0]
+            delta = delta_ref[0, 0]
+            q_pos = q0 + qi * bq + lax.iota(jnp.int32, bq)
+            k_pos = k0 + ki * bkv + lax.iota(jnp.int32, bkv)
+            mask = _mask_block(q_pos, k_pos, causal=causal, window=window,
+                               prefix_len=prefix)
+            # fully-masked rows carry lse = -inf; keep the exp argument
+            # finite so p is an exact 0, not a masked NaN
+            s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+            p = jnp.exp(jnp.where(mask, s - lse[:, None], 0.0))
+            p = jnp.where(mask, p, 0.0)
+            dv_ref[0, 0] = dv_ref[0, 0] + lax.dot_general(
+                p, do, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            dp = lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+            ds = p * (dp - delta[:, None]) * sm_scale
+            dk_ref[0, 0] = dk_ref[0, 0] + lax.dot_general(
+                ds, q, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            dq_scr[...] += lax.dot_general(
+                ds, k, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+        @ctx.when(ctx.reduce_last(1))
+        def _flush_dq():
+            dq_ref[0, 0] = dq_scr[...].astype(dq_ref.dtype)
+
+    return Spec(
+        "ring_flash_bwd",
+        grid=(b, h, nq, nk),
+        reduce_axes=(2, 3),
+        scratch=[Scratch((bq, d), jnp.float32)],
+        inputs=[
+            Tile("q", (b, h, sq, d), dtype, block=(1, 1, bq, d),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            Tile("k", (b, hk, skv, d), dtype, block=(1, 1, bkv, d),
+                 index=lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+            Tile("v", (b, hk, skv, dv), dtype, block=(1, 1, bkv, dv),
+                 index=lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+            Tile("do", (b, h, sq, dv), dtype, block=(1, 1, bq, dv),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            Tile("lse", (b, h, sq), jnp.float32, block=(1, 1, bq),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi)),
+            Tile("delta", (b, h, sq), jnp.float32, block=(1, 1, bq),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi)),
+            Tile("q_start", (1, 1), jnp.int32),
+            Tile("k_start", (1, 1), jnp.int32),
+        ],
+        outputs=[
+            Tile("dq", (b, h, sq, d), dtype, block=(1, 1, bq, d),
+                 index=lambda b_, h_, qi, ki: (b_, h_, qi, 0), reduce=(3,)),
+            Tile("dk", (b, h, skv, d), jnp.float32, block=(1, 1, bkv, d),
+                 index=lambda b_, h_, qi, ki: (b_, h_, ki, 0), reduce=(2,)),
+            Tile("dv", (b, h, skv, dv), jnp.float32, block=(1, 1, bkv, dv),
+                 index=lambda b_, h_, qi, ki: (b_, h_, ki, 0), reduce=(2,)),
+        ],
+        body=body,
+        shard=ShardAxis(mesh_axis=D.mesh_axis, axis=3, extent=D.ring_steps,
+                        collective="ppermute", rotate=("k", "v"),
+                        sharded_outputs=("dk", "dv")))

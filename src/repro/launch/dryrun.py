@@ -142,8 +142,7 @@ def _compile_once(cfg, shape, mesh, *, scan_layers, moe_dispatch, remat,
                moe_dispatch=moe_dispatch, scan_layers=scan_layers,
                ce_chunks=(ce_chunks if shape.kind == "train" else 1))
     specs = input_specs(cfg, shape)
-    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
-    _, pspecs_tp, _ = make_shardings(model, mesh, fsdp=False)
+    _, pspecs_tp, _, params_sds = make_shardings(model, mesh, fsdp=False)
     tp_bytes = R.spec_bytes_per_device(params_sds, pspecs_tp, mesh)
     fsdp = tp_bytes > FSDP_THRESHOLD_BYTES
 

@@ -22,7 +22,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["serving_probes", "train_probes", "adopt_winners"]
+__all__ = ["serving_probes", "train_probes", "mesh_probes", "adopt_winners"]
 
 
 def _head_dims(cfg):
@@ -86,6 +86,33 @@ def train_probes(cfg, global_batch: int, seq_len: int) -> dict:
     (x, w), _ = _lm_head_shapes(cfg, rows)
     labels = jax.ShapeDtypeStruct((rows, 1), jnp.int32)
     probes["lm_head_ce"] = ((x, w, labels), dict(vocab=cfg.vocab_size))
+    return probes
+
+
+def mesh_probes(cfg, batch: int, prompt_len: int, *, shards: int,
+                mesh_axis: str = "model") -> dict:
+    """Probe shapes for ring-attention prefill over ``shards`` devices.
+
+    Under ``shard_map`` every shard runs the PER-SHARD kernel — sequence
+    length ``prompt_len // shards`` — so that is the shape to tune;
+    ``ring_steps`` rides in the params, keeping the persisted cache key (and
+    the spec's declared shard extent) distinct per mesh size."""
+    probe = jax.ShapeDtypeStruct
+    probes = {}
+    h, hk, hd = _head_dims(cfg)
+    dtype = jnp.dtype(getattr(cfg, "dtype", "float32"))
+    if shards < 1 or prompt_len % shards:
+        raise ValueError(
+            f"mesh_probes: shards={shards} does not divide prompt_len="
+            f"{prompt_len}")
+    loc = prompt_len // shards
+    if h and hd:
+        probes["ring_flash"] = (
+            (probe((batch, h, loc, hd), dtype),
+             probe((batch, hk, loc, hd), dtype),
+             probe((batch, hk, loc, hd), dtype)),
+            dict(causal=True, window=getattr(cfg, "window", None),
+                 ring_steps=shards, mesh_axis=mesh_axis))
     return probes
 
 

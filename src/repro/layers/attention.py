@@ -17,8 +17,9 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import (decode_attention, decode_ref,
                                            flash_attention, mha_chunked,
-                                           mha_ref)
-from repro.parallel.context import shard_activation
+                                           mha_ref, ring_flash_attention)
+from repro.parallel.context import current_rules, shard_activation
+from repro.parallel.rules import ring_axis_for
 
 from .common import dense_init, kernel_backend, rmsnorm
 from .rope import apply_rope
@@ -31,6 +32,20 @@ __all__ = [
 ]
 
 _CHUNKED_THRESHOLD = 8192  # jnp path switches to q-block-chunked beyond this
+
+
+def _ring_target(seq_len):
+    """(mesh, axis) when the ambient rules declare sequence-parallel ring
+    attention for this sequence length, else (None, None). Callers opt in
+    via ``Rules(ring_axis=...)`` (e.g. ``build_prefill_step(ring=True)``);
+    the divisibility guard keeps ragged shapes on the GSPMD path."""
+    rules = current_rules()
+    if rules is None or rules.ring_axis is None or rules.mesh is None:
+        return None, None
+    ax = ring_axis_for(rules.mesh, seq_len, model_axis=rules.ring_axis)
+    if ax is None:
+        return None, None
+    return rules.mesh, ax
 
 
 # ===========================================================================
@@ -70,7 +85,16 @@ def gqa_forward(params, x, cfg, *, positions=None, prefix_len=0,
     q = shard_activation(q, "act_bhsd")
     k = shard_activation(k, "act_bhsd")
 
-    if kernel_backend() == "pallas":
+    ring_mesh, ring_ax = _ring_target(s)
+    if ring_mesh is not None:
+        # declared ring schedule: kv chunks rotate by ppermute inside
+        # shard_map — no GSPMD-inferred collectives around the kernel
+        o = ring_flash_attention(
+            q, k, shard_activation(v, "act_bhsd"), mesh=ring_mesh,
+            mesh_axis=ring_ax, causal=True, window=cfg.window,
+            prefix_len=prefix_len,
+            backend="auto" if kernel_backend() == "pallas" else "jnp")
+    elif kernel_backend() == "pallas":
         o = flash_attention(q, k, v, causal=True, window=cfg.window,
                             prefix_len=prefix_len)
     elif s > _CHUNKED_THRESHOLD:

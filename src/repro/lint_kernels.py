@@ -48,6 +48,11 @@ def _aux_builders(op_name: str) -> list:
     if op_name == "lm_head_ce":
         from repro.kernels.lm_head.kernel import lm_head_bwd_builder
         return [("lm_head_ce/bwd", lm_head_bwd_builder)]
+    if op_name == "ring_flash":
+        from repro.kernels.flash_attention.kernel import (
+            flash_delta_builder, ring_flash_bwd_builder)
+        return [("ring_flash/delta", flash_delta_builder),
+                ("ring_flash/bwd", ring_flash_bwd_builder)]
     return []
 
 
@@ -112,6 +117,7 @@ def _cost_dict(rep) -> dict:
         bytes_out=rep.bytes_out, hbm_bytes=rep.hbm_bytes, flops=rep.flops,
         intensity=(None if rep.intensity is None
                    else round(rep.intensity, 4)),
+        comm_bytes=rep.comm_bytes, comm_detail=dict(rep.comm_detail),
         findings=[dict(code=f.code, spec=f.spec, subject=f.subject,
                        severity=f.severity, message=f.message)
                   for f in rep.findings])
@@ -214,17 +220,19 @@ def main(argv=None):
         kw = max((len(k["kernel"]) for c in costs.values()
                   for k in c["kernels"]), default=6)
         print(f"{'kernel':<{kw}}  {'vmem B':>10}  {'%bud':>5}  "
-              f"{'hbm B':>12}  {'flops':>14}  {'flop/B':>7}  pruned")
+              f"{'hbm B':>12}  {'flops':>14}  {'flop/B':>7}  "
+              f"{'comm B':>10}  pruned")
         for name, c in costs.items():
             for i, k in enumerate(c["kernels"]):
                 fl = "?" if k["flops"] is None else f"{k['flops']:,}"
                 ai = "?" if k["intensity"] is None else f"{k['intensity']:.2f}"
+                cm = "-" if not k.get("comm_bytes") else f"{k['comm_bytes']:,}"
                 npruned = (f"{len(c['sweep_pruned'])}/"
                            f"{len(c['sweep_pruned']) + c['sweep_kept']}"
                            if i == 0 else "")
                 print(f"{k['kernel']:<{kw}}  {k['vmem_bytes']:>10,}  "
                       f"{k['vmem_frac']:>5.0%}  {k['hbm_bytes']:>12,}  "
-                      f"{fl:>14}  {ai:>7}  {npruned}")
+                      f"{fl:>14}  {ai:>7}  {cm:>10}  {npruned}")
         for name, c in costs.items():
             for p in c["sweep_pruned"]:
                 print(f"  {name}: {p['overrides']} -> {p['reason']}")

@@ -24,18 +24,24 @@ __all__ = ["shard_activation", "use_rules", "current_rules", "Rules"]
 
 class Rules:
     def __init__(self, *, batch_axes=("pod", "data"), model_axis="model",
-                 seq_axes=None, mesh=None):
+                 seq_axes=None, mesh=None, ring_axis=None):
         self.batch_axes = batch_axes
         self.model_axis = model_axis
         self.seq_axes = seq_axes
         self.mesh = mesh
+        # sequence-parallel attention: when set, q/k/v shard their SEQUENCE
+        # dim over this mesh axis and attention runs the declared ring
+        # schedule (kernels.flash_attention.ring) instead of leaving GSPMD
+        # to infer collectives around a head-sharded flash call
+        self.ring_axis = ring_axis
 
     def spec(self, kind: str) -> Optional[P]:
         b, m, s = self.batch_axes, self.model_axis, self.seq_axes
         table = {
             "act_btd": P(b, s, None),
             "act_btf": P(b, None, m),
-            "act_bhsd": P(b, m, None, None),
+            "act_bhsd": (P(b, None, self.ring_axis, None) if self.ring_axis
+                         else P(b, m, None, None)),
             "act_bd": P(b, None),
             "act_btv": P(b, None, m),
         }

@@ -14,7 +14,24 @@ import jax
 from jax.sharding import PartitionSpec as P
 from jax.tree_util import DictKey, SequenceKey
 
-__all__ = ["param_specs", "batch_specs", "zero1_specs", "spec_bytes_per_device"]
+__all__ = ["param_specs", "batch_specs", "zero1_specs",
+           "spec_bytes_per_device", "ring_axis_for"]
+
+
+def ring_axis_for(mesh, seq_len, *, model_axis="model"):
+    """The mesh axis a sequence of ``seq_len`` can ring over, or None.
+
+    Ring attention needs the model axis present, more than one shard, and an
+    evenly divisible sequence (every shard runs the same kernel grid);
+    callers use this to decide between the declared ring schedule and the
+    plain GSPMD-sharded path."""
+    if mesh is None:
+        return None
+    shape = dict(getattr(mesh, "shape", {}))
+    n = int(shape.get(model_axis, 1))
+    if n > 1 and seq_len % n == 0:
+        return model_axis
+    return None
 
 
 # rule table: leaf name -> spec template for its BASE (unstacked) dims.

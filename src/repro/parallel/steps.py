@@ -47,18 +47,26 @@ def _join(a, b):
     return at + bt
 
 
-def make_shardings(model, mesh: Mesh, *, fsdp: bool = False):
-    """Returns (param_shardings, pspecs, rules) for a model on a mesh.
+def make_shardings(model, mesh: Mesh, *, fsdp: bool = False,
+                   ring: bool = False):
+    """Returns (param_shardings, pspecs, rules, params_shape) for a model on
+    a mesh. ``params_shape`` is the abstract init tree — step builders reuse
+    it rather than re-tracing ``model.init`` a second time.
 
     ``fsdp=True`` additionally shards each param's largest replicated dim over
-    the data axis (ZeRO-3 via GSPMD: XLA all-gathers weights per layer)."""
+    the data axis (ZeRO-3 via GSPMD: XLA all-gathers weights per layer).
+    ``ring=True`` declares sequence-parallel ring attention over the model
+    axis: activations shard their sequence dim and attention runs the
+    declared ``shard_map`` ring schedule when the length divides the axis."""
     batch_axes, model_axis = axis_names(mesh)
     params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
     pspecs = R.param_specs(params_shape, model.cfg, mesh, model_axis=model_axis)
     if fsdp and "data" in mesh.axis_names:
         pspecs = R.zero1_specs(pspecs, params_shape, mesh, data_axis="data")
-    rules = Rules(batch_axes=batch_axes, model_axis=model_axis, mesh=mesh)
-    return _named(mesh, pspecs), pspecs, rules
+    ring_axis = model_axis if ring and mesh.shape[model_axis] > 1 else None
+    rules = Rules(batch_axes=batch_axes, model_axis=model_axis, mesh=mesh,
+                  ring_axis=ring_axis)
+    return _named(mesh, pspecs), pspecs, rules, params_shape
 
 
 # ---------------------------------------------------------------------------
@@ -172,8 +180,8 @@ def build_train_step(model, optimizer, mesh: Mesh, *, zero1: bool = False,
                      batch_shapes=None):
     """Returns (jitted step, shardings dict). step(params, opt, batch) ->
     (params, opt, loss, metrics)."""
-    param_sh, pspecs, act_rules = make_shardings(model, mesh, fsdp=fsdp)
-    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    param_sh, pspecs, act_rules, params_shape = make_shardings(
+        model, mesh, fsdp=fsdp)
     if (zero1 or fsdp) and "data" in mesh.axis_names:
         moment_pspecs = R.zero1_specs(pspecs, params_shape, mesh,
                                       data_axis="data")
@@ -227,8 +235,12 @@ def build_train_step(model, optimizer, mesh: Mesh, *, zero1: bool = False,
 
 
 def build_prefill_step(model, mesh: Mesh, *, batch: int, max_len: int,
-                       batch_shapes=None, fsdp: bool = False):
-    param_sh, pspecs, act_rules = make_shardings(model, mesh, fsdp=fsdp)
+                       batch_shapes=None, fsdp: bool = False,
+                       ring: bool = False):
+    """``ring=True`` opts prefill attention into the declared sequence-
+    parallel ring schedule (see ``make_shardings``)."""
+    param_sh, pspecs, act_rules, _ = make_shardings(model, mesh, fsdp=fsdp,
+                                                    ring=ring)
     c_pspecs = cache_pspecs(model, mesh, batch, max_len, kind="prefill")
     cache_sh = _named(mesh, c_pspecs)
 
@@ -249,9 +261,16 @@ def build_prefill_step(model, mesh: Mesh, *, batch: int, max_len: int,
                     "pspecs": pspecs, "rules": act_rules}
 
 
-def build_serve_step(model, mesh: Mesh, *, batch: int, max_len: int):
-    """One-token decode step over a sharded cache."""
-    param_sh, pspecs, act_rules = make_shardings(model, mesh)
+def build_serve_step(model, mesh: Mesh, *, batch: int, max_len: int,
+                     greedy: bool = False):
+    """One-token decode step over a sharded cache.
+
+    ``greedy=False`` (the default) steps via ``model.decode_step`` ->
+    (logits, cache), leaving sampling to the host. ``greedy=True`` routes
+    through ``model.greedy_step`` -> (next_token, logits, cache): with a
+    fused LM head the argmax comes out of the logits kernel itself, so the
+    host loop feeds tokens straight back without a device round-trip."""
+    param_sh, pspecs, act_rules, _ = make_shardings(model, mesh)
     c_pspecs = cache_pspecs(model, mesh, batch, max_len)
     cache_sh = _named(mesh, c_pspecs)
     batch_axes, _ = axis_names(mesh)
@@ -259,12 +278,21 @@ def build_serve_step(model, mesh: Mesh, *, batch: int, max_len: int):
     tok_sh = NamedSharding(mesh, P(batch_axes if batch % bsize == 0 else None,
                                    None))
 
-    def serve(params, cache, tokens):
-        with use_rules(act_rules):
-            return model.decode_step(params, tokens, cache)
+    if greedy:
+        def serve(params, cache, tokens):
+            with use_rules(act_rules):
+                nxt, logits, new_cache = model.greedy_step(
+                    params, tokens, cache)
+                return nxt, logits, new_cache
+        out_sh = (None, None, cache_sh)
+    else:
+        def serve(params, cache, tokens):
+            with use_rules(act_rules):
+                return model.decode_step(params, tokens, cache)
+        out_sh = (None, cache_sh)
 
     jit_fn = jax.jit(serve, in_shardings=(param_sh, cache_sh, tok_sh),
-                     out_shardings=(None, cache_sh), donate_argnums=(1,))
+                     out_shardings=out_sh, donate_argnums=(1,))
     return jit_fn, {"params": param_sh, "cache": cache_sh, "tokens": tok_sh,
                     "cache_pspecs": c_pspecs, "pspecs": pspecs,
-                    "rules": act_rules}
+                    "rules": act_rules, "greedy": greedy}

@@ -198,6 +198,11 @@ def main(argv=None):
                     help="with --arch: only the serving probes")
     ap.add_argument("--train", action="store_true",
                     help="with --arch: only the train-step probes")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="with --arch: also pre-tune ring attention for an "
+                         "N-way model mesh — the probe is the PER-SHARD "
+                         "shape (prompt-len / N) and the persisted winner is "
+                         "keyed on the shard extent (ring_steps=N)")
     ap.add_argument("--backend", default="auto")
     ap.add_argument("--repeats", type=int, default=2)
     ap.add_argument("--no-cache", action="store_true",
@@ -258,7 +263,7 @@ def main(argv=None):
         ap.error("pass --list, --op NAME or --arch NAME")
 
     from repro.configs import get_config, reduced as reduce_cfg
-    from repro.launch.tuning import serving_probes, train_probes
+    from repro.launch.tuning import mesh_probes, serving_probes, train_probes
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -270,6 +275,12 @@ def main(argv=None):
         probes.update(serving_probes(cfg, args.batch, args.prompt_len, max_len))
     if args.train or both:
         probes.update(train_probes(cfg, args.batch, args.seq_len))
+    if args.mesh:
+        try:
+            probes.update(mesh_probes(cfg, args.batch, args.prompt_len,
+                                      shards=args.mesh))
+        except ValueError as e:
+            ap.error(str(e))
 
     print(f"[tune] arch={args.arch} backend={args.backend} "
           f"probes={sorted(probes)} (device={jax.default_backend()})")
