@@ -6,8 +6,8 @@ import time
 
 import jax
 
-__all__ = ["time_fn", "Row", "emit", "write_json", "check_manifest",
-           "SMOKE_TIME"]
+__all__ = ["time_fn", "time_fn_paired", "Row", "emit", "write_json",
+           "check_manifest", "SMOKE_TIME"]
 
 
 # Smoke rows feed the CI perf gate (benchmarks/perf_gate.py), so the timings
@@ -15,8 +15,10 @@ __all__ = ["time_fn", "Row", "emit", "write_json", "check_manifest",
 # fresh jitted fn are 3-10x steady state), best-of a few reps, and — since
 # the gated calls are ~15-40us — averaged over enough inner calls per
 # timed window (SMOKE_INNER) that one lucky/unlucky scheduler slice can't
-# flip a ratio past the gate. Still tiny shapes, still seconds per stage.
-SMOKE_TIME = dict(warmup=5, repeats=5)
+# flip a ratio past the gate, with enough repeats that the min-of-repeats
+# survives a multi-hundred-ms noise burst (a shared CPU neighbor) spanning
+# a few windows. Still tiny shapes, still seconds per stage.
+SMOKE_TIME = dict(warmup=5, repeats=9)
 SMOKE_INNER = 64
 
 
@@ -35,6 +37,39 @@ def time_fn(fn, *args, warmup=2, repeats=5, inner=1):
         jax.block_until_ready(out)
         best = min(best, (time.perf_counter() - t0) / inner)
     return best
+
+
+def time_fn_paired(fa, a_args, fb, b_args, warmup=2, repeats=5, inner=1):
+    """Paired timing for an A/B pair whose RATIO is perf-gated. The two
+    timed windows alternate each round, and the gated statistic is the
+    MEDIAN over rounds of the adjacent-window b/a ratio: the two windows of
+    one round run milliseconds apart, so host frequency scaling and noisy
+    CPU neighbors (which move absolute wall time 2x between bench runs)
+    cancel out of each round's ratio, and the median shrugs off the rounds
+    a noise burst does split. min(A-windows)/min(B-windows) has no such
+    pairing — the two mins can come from different machine states.
+    Returns (sec_a, sec_b, ratio): best-of-rounds seconds for each side
+    (the Row absolutes) plus the median paired ratio (the gate input)."""
+    for f, args in ((fa, a_args), (fb, b_args)):
+        out = None
+        for _ in range(warmup):
+            out = f(*args)
+        if out is not None:
+            jax.block_until_ready(out)
+    best = [float("inf"), float("inf")]
+    ratios = []
+    for _ in range(repeats):
+        win = [0.0, 0.0]
+        for i, (f, args) in enumerate(((fa, a_args), (fb, b_args))):
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                out = f(*args)
+            jax.block_until_ready(out)
+            win[i] = (time.perf_counter() - t0) / inner
+            best[i] = min(best[i], win[i])
+        ratios.append(win[1] / win[0])
+    ratios.sort()
+    return best[0], best[1], ratios[len(ratios) // 2]
 
 
 class Row:

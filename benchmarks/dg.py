@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.apps import dg_swe
-from .common import Row, SMOKE_INNER, SMOKE_TIME, time_fn
+from .common import Row, SMOKE_INNER, SMOKE_TIME, time_fn, time_fn_paired
 
 ORDERS = (1, 2, 3, 4, 5, 6, 7)
 
@@ -17,64 +17,90 @@ def run(rows: list, smoke: bool = False):
     inner = SMOKE_INNER if smoke else 2
     for n in ((1, 2) if smoke else ORDERS):
         nx = 4 if smoke else 24
-        for backend in ("jnp", "loops", "pallas", "native"):
-            model = "jnp" if backend == "native" else backend
-            app = dg_swe.DGVolume(model=model, nx=nx, ny=nx, n=n, jitter=0.1)
-            rng = np.random.RandomState(0)
-            Q = jnp.asarray(np.stack([
-                2.0 + 0.1 * rng.randn(app.E, app.np_),
-                0.3 * rng.randn(app.E, app.np_),
-                0.3 * rng.randn(app.E, app.np_)], -1), jnp.float32)
-            if backend == "native":
-                fn = jax.jit(lambda q: dg_swe.volume_ref(
-                    q, app.o_geom.data, app.o_db.data, app.o_dr.data,
-                    app.o_ds.data))
-                sec = time_fn(fn, Q, inner=inner, **tkw)
+        # native first: in smoke the unified backends are timed PAIRED
+        # against it and the perf gate reads the drift-immune paired ratio
+        # (see time_fn_paired) instead of dividing two separately-timed us.
+        nat = dg_swe.DGVolume(model="jnp", nx=nx, ny=nx, n=n, jitter=0.1)
+        rng = np.random.RandomState(0)
+        Q = jnp.asarray(np.stack([
+            2.0 + 0.1 * rng.randn(nat.E, nat.np_),
+            0.3 * rng.randn(nat.E, nat.np_),
+            0.3 * rng.randn(nat.E, nat.np_)], -1), jnp.float32)
+        nat_fn = jax.jit(lambda q: dg_swe.volume_ref(
+            q, nat.o_geom.data, nat.o_db.data, nat.o_dr.data,
+            nat.o_ds.data))
+        sec = time_fn(nat_fn, Q, inner=inner, **tkw)
+        _vol_row(rows, "native", n, nat, sec)
+        for backend in ("jnp", "loops", "pallas"):
+            if backend == "loops" and n > 4:
+                continue
+            if backend == "pallas" and not smoke and n > 3:
+                continue  # interpret-mode overhead at high order on CPU
+            app = dg_swe.DGVolume(model=backend, nx=nx, ny=nx, n=n,
+                                  jitter=0.1)
+            extra = ""
+            if smoke:
+                _, sec, ratio = time_fn_paired(
+                    nat_fn, (Q,), lambda: app.rhs_volume(Q), (),
+                    inner=inner, **tkw)
+                extra = f"; gate_ratio={ratio:.3f}"
             else:
-                if backend == "loops" and n > 4:
-                    continue
-                if backend == "pallas" and not smoke and n > 3:
-                    continue  # interpret-mode overhead at high order on CPU
                 sec = time_fn(lambda: app.rhs_volume(Q), inner=inner, **tkw)
-            gflops = app.E * dg_swe.dg_flops_per_element(app.np_) / sec / 1e9
-            gbs = app.E * dg_swe.dg_bytes_per_element(app.np_, 4) / sec / 1e9
-            rows.append(Row(f"dg/{backend}/N{n}/E{app.E}", sec,
-                            f"{gflops:.2f} GFLOP/s; {gbs:.2f} GB/s"))
+            _vol_row(rows, backend, n, app, sec, extra)
         _surface_rows(rows, n, nx, smoke, tkw, inner)
     return rows
+
+
+def _vol_row(rows, backend, n, app, sec, extra=""):
+    gflops = app.E * dg_swe.dg_flops_per_element(app.np_) / sec / 1e9
+    gbs = app.E * dg_swe.dg_bytes_per_element(app.np_, 4) / sec / 1e9
+    rows.append(Row(f"dg/{backend}/N{n}/E{app.E}", sec,
+                    f"{gflops:.2f} GFLOP/s; {gbs:.2f} GB/s{extra}"))
 
 
 def _surface_rows(rows, n, nx, smoke, tkw, inner):
     """The DG surface-flux kernel (Lax-Friedrichs + LIFT) on pre-gathered
     traces — the second half of the full DG RHS, through the same language."""
     rng = np.random.RandomState(1)
-    for backend in ("jnp", "loops", "pallas", "native"):
+    nat = dg_swe.SWESolver(model="jnp", nx=nx, ny=nx, n=n, jitter=0.0)
+    Q = jnp.asarray(np.stack([
+        2.0 + 0.1 * rng.randn(nat.E, nat.np_),
+        0.3 * rng.randn(nat.E, nat.np_),
+        0.3 * rng.randn(nat.E, nat.np_)], -1), jnp.float32)
+    Qf = Q.reshape(nat.E * nat.np_, 3)
+    QM, QP = Qf[nat.vmapM], Qf[nat.vmapP]
+    nat_fn = jax.jit(lambda a, b: dg_swe.surface_ref(
+        a, b, nat.o_nrm.data, nat.o_lift.data))
+    sec = time_fn(nat_fn, QM, QP, inner=inner, **tkw)
+    _surf_row(rows, "native", n, nat, sec)
+    for backend in ("jnp", "loops", "pallas"):
         if backend == "loops" and n > 4:
             continue
         if backend == "pallas" and not smoke and n > 3:
             continue
-        model = "jnp" if backend == "native" else backend
-        app = dg_swe.SWESolver(model=model, nx=nx, ny=nx, n=n, jitter=0.0)
-        Q = jnp.asarray(np.stack([
-            2.0 + 0.1 * rng.randn(app.E, app.np_),
-            0.3 * rng.randn(app.E, app.np_),
-            0.3 * rng.randn(app.E, app.np_)], -1), jnp.float32)
-        Qf = Q.reshape(app.E * app.np_, 3)
-        QM, QP = Qf[app.vmapM], Qf[app.vmapP]
-        if backend == "native":
-            fn = jax.jit(lambda a, b: dg_swe.surface_ref(
-                a, b, app.o_nrm.data, app.o_lift.data))
-            sec = time_fn(fn, QM, QP, inner=inner, **tkw)
+        app = dg_swe.SWESolver(model=backend, nx=nx, ny=nx, n=n, jitter=0.0)
+        extra = ""
+        if smoke:
+            _, sec, ratio = time_fn_paired(
+                nat_fn, (QM, QP),
+                lambda: app.surf_kernel.run(QM, QP, app.o_nrm.data,
+                                            app.o_lift.data)[0], (),
+                inner=inner, **tkw)
+            extra = f"; gate_ratio={ratio:.3f}"
         else:
             sec = time_fn(
                 lambda: app.surf_kernel.run(QM, QP, app.o_nrm.data,
                                             app.o_lift.data)[0],
                 inner=inner, **tkw)
-        # per element: flux algebra on 3nfp face nodes + the (np x 3nfp x 3)
-        # LIFT contraction
-        flops = app.E * (40 * app.nfp3 + 2 * app.np_ * app.nfp3 * 3)
-        rows.append(Row(f"dg/surface/{backend}/N{n}/E{app.E}", sec,
-                        f"{flops / sec / 1e9:.2f} GFLOP/s"))
+        _surf_row(rows, backend, n, app, sec, extra)
+
+
+def _surf_row(rows, backend, n, app, sec, extra=""):
+    # per element: flux algebra on 3nfp face nodes + the (np x 3nfp x 3)
+    # LIFT contraction
+    flops = app.E * (40 * app.nfp3 + 2 * app.np_ * app.nfp3 * 3)
+    rows.append(Row(f"dg/surface/{backend}/N{n}/E{app.E}", sec,
+                    f"{flops / sec / 1e9:.2f} GFLOP/s{extra}"))
 
 
 if __name__ == "__main__":

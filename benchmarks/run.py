@@ -2,13 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV. FD = paper Fig. 2; SEM = Figs. 3-4;
 DG = Figs. 5-6; attention/ssm = LM kernel hot-spots; unified = matmul/rmsnorm
-in the unified kernel language on all three backends; roofline rows summarize
+in the unified kernel language on all three backends; serve = continuous-vs-
+static batching throughput; roofline rows summarize
 the dry-run artifacts when present (full table via ``-m benchmarks.roofline``).
 """
 
 from __future__ import annotations
 
-from . import attention, dg, fd, sem, unified
+from . import attention, dg, fd, sem, serve, unified
 from .common import Row, check_manifest, emit, write_json
 
 
@@ -74,6 +75,7 @@ def main(argv=None) -> None:
     dg.run(rows, smoke=args.smoke)
     attention.run(rows, smoke=args.smoke)
     unified.run(rows, smoke=args.smoke)
+    serve.run(rows, smoke=args.smoke)
     try:
         _cost_rows(rows)
     except Exception as e:

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.apps import sem
-from .common import Row, SMOKE_INNER, SMOKE_TIME, time_fn
+from .common import Row, SMOKE_INNER, SMOKE_TIME, time_fn, time_fn_paired
 
 ORDERS = (1, 2, 3, 4, 5, 6, 7)
 
@@ -19,27 +19,44 @@ def run(rows: list, smoke: bool = False):
         nq = n + 1
         E = max(512 // nq, 32)
         ex = 2 if smoke else max(2, round(E ** (1 / 3)))
-        for backend in ("jnp", "loops", "pallas", "native"):
-            model = "jnp" if backend == "native" else backend
-            op = sem.SEMOperator(model=model, ex=ex, ey=ex, ez=ex, n=n,
+        # native first: in smoke every unified backend is timed PAIRED
+        # against this fn (time_fn_paired) and the perf gate reads the
+        # paired-ratio from the row — absolute us at these ~15-25us shapes
+        # swings 2x with host frequency between runs, the paired ratio
+        # doesn't.
+        nat = sem.SEMOperator(model="jnp", ex=ex, ey=ex, ez=ex, n=n,
+                              deform=0.1)
+        u = jnp.asarray(np.random.RandomState(0).randn(
+            nat.E, nq, nq, nq), jnp.float32)
+        nat_fn = jax.jit(lambda u_: sem.apply_ref(u_, nat.o_geo.data,
+                                                  nat.o_dmat.data))
+        sec = time_fn(nat_fn, u, inner=inner, **tkw)
+        _row(rows, "native", n, nat, sec)
+        for backend in ("jnp", "loops", "pallas"):
+            if backend == "loops" and n > 4:
+                continue  # serial expansion too slow at high order on CPU
+            if backend == "pallas" and not smoke and n > 3:
+                continue  # interpret-mode overhead at high order on CPU
+            op = sem.SEMOperator(model=backend, ex=ex, ey=ex, ez=ex, n=n,
                                  deform=0.1)
-            u = jnp.asarray(np.random.RandomState(0).randn(
-                op.E, nq, nq, nq), jnp.float32)
-            if backend == "native":
-                fn = jax.jit(lambda u_: sem.apply_ref(u_, op.o_geo.data,
-                                                      op.o_dmat.data))
-                sec = time_fn(fn, u, inner=inner, **tkw)
+            extra = ""
+            if smoke:
+                _, sec, ratio = time_fn_paired(
+                    nat_fn, (u,), lambda: op.apply_local(u), (),
+                    inner=inner, **tkw)
+                extra = f"; gate_ratio={ratio:.3f}"
             else:
-                if backend == "loops" and n > 4:
-                    continue  # serial expansion too slow at high order on CPU
-                if backend == "pallas" and not smoke and n > 3:
-                    continue  # interpret-mode overhead at high order on CPU
                 sec = time_fn(lambda: op.apply_local(u), inner=inner, **tkw)
-            gflops = op.E * sem.sem_flops_per_element(nq) / sec / 1e9
-            gbs = op.E * sem.sem_bytes_per_element(nq, 4) / sec / 1e9
-            rows.append(Row(f"sem/{backend}/N{n}/E{op.E}", sec,
-                            f"{gflops:.2f} GFLOP/s; {gbs:.2f} GB/s"))
+            _row(rows, backend, n, op, sec, extra)
     return rows
+
+
+def _row(rows, backend, n, op, sec, extra=""):
+    nq = n + 1
+    gflops = op.E * sem.sem_flops_per_element(nq) / sec / 1e9
+    gbs = op.E * sem.sem_bytes_per_element(nq, 4) / sec / 1e9
+    rows.append(Row(f"sem/{backend}/N{n}/E{op.E}", sec,
+                    f"{gflops:.2f} GFLOP/s; {gbs:.2f} GB/s{extra}"))
 
 
 if __name__ == "__main__":

@@ -13,13 +13,14 @@ import numpy as np
 from repro.core import BACKENDS, estimate_cost
 from repro.core.lang import defines_namespace
 from repro.kernels.flash_attention import (decode_attention, flash_attention,
-                                           ring_flash, ring_flash_attention,
+                                           paged_decode_attention, ring_flash,
+                                           ring_flash_attention,
                                            rolling_slot_pos)
 from repro.kernels.lm_head import lm_head_ce, lm_head_logits
 from repro.kernels.matmul import matmul
 from repro.kernels.rmsnorm import rmsnorm_unified
 
-from .common import Row, SMOKE_TIME, time_fn
+from .common import (Row, SMOKE_INNER, SMOKE_TIME, time_fn, time_fn_paired)
 
 __all__ = ["run"]
 
@@ -102,15 +103,57 @@ def run(rows, smoke: bool = False):
                         f"s={s2} steps={steps} comm_B={comm} "
                         f"gflops={afl / sec / 1e9:.1f}"))
 
-    # flash DECODE: one query token vs the kv cache (dynamic kv_len)
+    # flash DECODE, contiguous AND paged: one query token vs the kv cache.
+    # Decode rows time the JITTED call — serving runs this kernel inside a
+    # jitted step, and the paged-vs-contiguous perf gate must compare kernel
+    # cost, not eager per-call dispatch overhead. The paged variant reads the
+    # SAME kv through the block-table input tile (continuous-batching cache
+    # layout): the KV lives in a shuffled pool of fixed-size pages and the
+    # kernel's index map reads the table at runtime. page == the contiguous
+    # row's block_kv, so the perf gate can pin the gather overhead (paged
+    # within 1.3x of contiguous at the same shape). The two rows are timed
+    # INTERLEAVED per backend (time_fn_paired) because the gate checks their
+    # ratio — separate timing blocks put machine drift on the ratio. The
+    # decode cache is LONGER than the smoke attention shape: at s=128 the
+    # grid is 2 kv blocks and per-call fixed overhead (one extra scalar
+    # operand + prefetch setup) dominates the ratio, flapping it past any
+    # sane limit; at 4+ blocks the per-page gather — the thing the gate
+    # pins — is what's measured.
     q1 = q[:, :, :1]
-    dfl = 4 * b2 * h2 * s2 * d2
+    sD = 256 if smoke else s2
+    kkD = rng.randn(b2, h2, sD, d2).astype(np.float32)
+    vvD = rng.randn(b2, h2, sD, d2).astype(np.float32)
+    dfl = 4 * b2 * h2 * sD * d2
+    dkw = dict(tkw, inner=SMOKE_INNER) if smoke else tkw
+    page = bq
+    nsp = sD // page
+    npg = b2 * nsp + 1                       # + the reserved null page 0
+    ptab = np.zeros((b2, nsp), np.int32)
+    perm = rng.permutation(b2 * nsp) + 1     # shuffled: a real gather
+    pk = np.zeros((npg, h2, page, d2), np.float32)
+    pv = np.zeros((npg, h2, page, d2), np.float32)
+    for bi in range(b2):
+        for j in range(nsp):
+            pg = int(perm[bi * nsp + j])
+            ptab[bi, j] = pg
+            pk[pg] = kkD[bi, :, j * page:(j + 1) * page]
+            pv[pg] = vvD[bi, :, j * page:(j + 1) * page]
+    pkl = np.full((b2,), sD, np.int32)
     for backend in BACKENDS:
-        sec = time_fn(lambda q_, k_, v_, be=backend: decode_attention(
-            q_, k_, v_, block_kv=bq, backend=be), q1, kk, vv, **tkw)
+        fc = jax.jit(lambda q_, k_, v_, be=backend: decode_attention(
+            q_, k_, v_, block_kv=bq, backend=be))
+        fp = jax.jit(lambda q_, k_, v_, t_, l_, be=backend:
+                     paged_decode_attention(q_, k_, v_, block_table=t_,
+                                            kv_len=l_, backend=be))
+        sec, psec, ratio = time_fn_paired(fc, (q1, kkD, vvD),
+                                          fp, (q1, pk, pv, ptab, pkl), **dkw)
         rows.append(Row(f"unified/flash_decode/{backend}", sec,
-                        f"s={s2} bkv={bq} "
+                        f"s={sD} bkv={bq} "
                         f"gflops={dfl / sec / 1e9:.1f}"))
+        rows.append(Row(f"unified/flash_decode_paged/{backend}", psec,
+                        f"s={sD} page={page} "
+                        f"gflops={dfl / psec / 1e9:.1f} "
+                        f"gate_ratio={ratio:.3f}"))
 
     # WINDOWED flash decode: a rotated rolling cache (slot = pos % W) decoded
     # past the wrap — the slot_pos input tile carries the data-dependent mask

@@ -25,7 +25,8 @@
 #            artifacts/bench_smoke.json, then the row-manifest check — a
 #            benchmark row disappearing fails the build — and the perf gate
 #            (benchmarks/perf_gate.py): each app's best unified backend must
-#            be within 1.5x of its native baseline
+#            be within 1.5x of its native baseline, and paged decode (the
+#            serving engine's block-table path) within 1.3x of contiguous
 #
 # Usage:
 #   scripts/ci.sh                     # all stages
@@ -116,7 +117,8 @@ stage_bench() {
         --check-manifest benchmarks/smoke_manifest.txt >/dev/null
     # perf gate: best unified backend within 1.5x of the native baseline for
     # every app workload (fd2d / sem / dg volume / dg surface) — the paper's
-    # "portability without a performance tax" claim, enforced per commit
+    # "portability without a performance tax" claim — plus paged decode
+    # within 1.3x of contiguous on the served backend, enforced per commit
     python -m benchmarks.perf_gate artifacts/bench_smoke.json
 }
 

@@ -104,6 +104,7 @@ ANALYZE_MODES = ("off", "warn", "error", "strict")
 SEVERITY = {
     "BOUNDS_INDEX": "error",
     "BOUNDS_HALO": "error",
+    "BOUNDS_TABLE": "error",
     "BOUNDS_SCRATCH": "error",
     "RACE_PARALLEL_WRITE": "error",
     "SEMANTICS_ACC_INDEX": "error",
@@ -225,6 +226,58 @@ def _bounds_detail(bi, nb):
     return f"rank {len(bi)} != block-grid rank {len(nb)}"
 
 
+def _table_findings(spec):
+    """Structural validation of every ``Tile(index_tile=...)`` declaration:
+    the dynamic block index must come from an integer INPUT tile whose block
+    is all-ones (its block index IS the element it contributes), naming a
+    real axis of the gathered tile. Run-time values are clamped by the
+    expansions, so a well-formed declaration cannot read out of bounds —
+    malformed declarations are certain bugs (BOUNDS_TABLE)."""
+    findings = []
+    in_tiles = {t.name: t for t in spec.inputs}
+
+    def bad(t, msg):
+        findings.append(Finding(
+            "BOUNDS_TABLE", spec.name, t.name,
+            f"tile {t.name!r}: {msg}"))
+
+    for t in spec.outputs:
+        if getattr(t, "index_tile", None) is not None:
+            bad(t, "index_tile= is input-only (a run-time write destination "
+                   "would race undetectably)")
+    for t in spec.inputs:
+        it = getattr(t, "index_tile", None)
+        if it is None:
+            continue
+        if (not isinstance(it, tuple)) or len(it) != 2:
+            bad(t, f"index_tile must be a (table_name, axis) pair, got {it!r}")
+            continue
+        tname, axis = it
+        if t.halo is not None and any(t.resolved_halo()):
+            bad(t, "halo= and index_tile= cannot combine (the windowed "
+                   "lowering would reorder the gathered axis)")
+        if not isinstance(axis, int) or not 0 <= axis < len(t.shape):
+            bad(t, f"index_tile axis {axis!r} out of range for rank-"
+                   f"{len(t.shape)} tile")
+            continue
+        table = in_tiles.get(tname)
+        if table is None or table is t:
+            bad(t, f"index_tile names {tname!r}, which is not another "
+                   "input tile of this kernel")
+            continue
+        if getattr(table, "index_tile", None) is not None:
+            bad(t, f"table tile {tname!r} is itself gathered via "
+                   "index_tile — tables must have static index maps")
+        if not np.issubdtype(np.dtype(table.dtype), np.integer):
+            bad(t, f"table tile {tname!r} dtype {table.dtype} is not an "
+                   "integer type")
+        if any(b != 1 for b in table.resolved_block()):
+            bad(t, f"table tile {tname!r} block {table.resolved_block()} "
+                   "must be all-ones so its block index selects exactly "
+                   "the element the gather reads")
+    return findings
+
+
 def check_grid_invariants(spec):
     """Enumerate every tile's index map over the whole grid.
 
@@ -237,10 +290,14 @@ def check_grid_invariants(spec):
     zero_r = (0,) * len(spec.reduce_axes)
 
     input_reduce_invariant = []
+    tab_findings = _table_findings(spec)
+    if tab_findings:
+        return tab_findings, input_reduce_invariant
     for t in spec.inputs:
         blk = t.resolved_block()
         idx = t.resolved_index(spec.grid)
         nb = tuple(s // bb for s, bb in zip(t.shape, blk))
+        gax = None if t.index_tile is None else t.index_tile[1]
         for ax, (r, s) in enumerate(zip(t.resolved_halo(), t.shape)):
             # a radius past the array extent would wrap more than one full
             # period (or clamp a window wider than the data) — certainly a
@@ -256,6 +313,11 @@ def check_grid_invariants(spec):
         bi0 = None
         for cell in np.ndindex(*spec.grid):
             bi = tuple(int(i) for i in idx(*cell))
+            if gax is not None and len(bi) == len(nb):
+                # the static map's value at the gathered axis is an ignored
+                # placeholder: the run-time table value is clamped in-range
+                # by construction, so only the other axes are bounds-checked
+                bi = bi[:gax] + (0,) + bi[gax + 1:]
             if len(bi) != len(nb) or any(
                     not (0 <= i < n) for i, n in zip(bi, nb)):
                 findings.append(Finding(
@@ -274,6 +336,16 @@ def check_grid_invariants(spec):
                 elif bi != bi0:
                     inv = False
         input_reduce_invariant.append(inv)
+
+    # a gathered tile's block index is only reduce-invariant when its own
+    # static map AND the table it reads are — a table indexed by a reduce id
+    # (the paged block walk) makes the gather a fresh fetch every step
+    name_to_i = {t.name: i for i, t in enumerate(spec.inputs)}
+    for i, t in enumerate(spec.inputs):
+        if t.index_tile is not None:
+            ti = name_to_i[t.index_tile[0]]
+            input_reduce_invariant[i] = (
+                input_reduce_invariant[i] and input_reduce_invariant[ti])
 
     for i, s in enumerate(spec.scratch):
         if any(d <= 0 for d in s.shape):
@@ -907,6 +979,14 @@ def _walk_costs(spec):
         # halo tiles fetch the overlapped window, not the bare block: the
         # amplification (b + 2r) / b per axis is real HBM traffic
         blk_bytes = math.prod(t.body_block()) * _itemsize(t.dtype)
+        if t.index_tile is not None:
+            # the gathered block index is run-time data: no consecutive-
+            # index elision credit can be proven, so every visiting cell is
+            # charged a fetch (the price of the indirection), and the
+            # REDUNDANT_FETCH heuristic — which reasons over the STATIC
+            # walk — is skipped
+            bytes_in += len(cells) * blk_bytes
+            continue
         walk = [tuple(idx(*c)) for c in cells]
         bytes_in += _runs(walk) * blk_bytes
         if reduce_axes and len(cells) > 1:
@@ -1202,9 +1282,11 @@ def estimate_cost(spec, defines=None, *, budget=None,
         # upper bound: every visit fetches its block, every output visit
         # writes it back (no consecutive-index elision credit) — EXCEPT
         # whole-array input tiles, which are grid-invariant (one resident
-        # copy, a constant index map) and fetched exactly once
+        # copy, a constant index map) and fetched exactly once. A gathered
+        # (index_tile) block is run-time-indexed and always per-visit.
         bytes_in = sum(
-            (1 if t.resolved_block() == tuple(t.shape) else ncells)
+            (1 if (t.resolved_block() == tuple(t.shape)
+                   and t.index_tile is None) else ncells)
             * math.prod(t.body_block()) * _itemsize(t.dtype)
             for t in spec.inputs)
         bytes_out = sum(

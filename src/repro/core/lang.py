@@ -74,6 +74,25 @@ Keyword mapping (paper appendix tables → this module):
                                whose index map ignores the reduce ids out of
                                the sequential reduce loop (one slice per
                                outer cell instead of one per reduce step)
+  tile-indexed index maps      ``Tile(index_tile=("table", axis))`` — the
+  (indirection DRIVING the     block index along ``axis`` is READ AT RUN TIME
+  fetch itself: vLLM's         from another i32 input tile (the "table") for
+  PagedAttention block         the current grid cell, instead of computed by
+  table)                       the static index map (whose value at ``axis``
+                               is an ignored placeholder; return 0 there).
+                               The table must be an integer input tile with
+                               an all-ones block — its block index IS the
+                               element it contributes — and the looked-up
+                               value is clamped to the valid block range.
+                               jnp/loops read the table element and
+                               dynamic-slice; pallas lowers the table to a
+                               scalar-prefetch operand
+                               (``pltpu.PrefetchScalarGridSpec``) whose ref
+                               the wrapped index maps read. The analyzer
+                               bounds-checks the declaration (BOUNDS_TABLE)
+                               and the cost model prices the gather as one
+                               fetch per visiting cell (no consecutive-reuse
+                               credit: the indices are dynamic)
   occaPrivate(Array)           ``ctx.private(x)`` — per-tile values (registers)
   occaCPU/occaGPU/occaOpenMP…  ``ctx.backend`` / ``ctx.is_pallas`` etc.
   occaKernelInfoArg            the ``ctx`` argument itself
@@ -176,6 +195,13 @@ class Tile:
     halo: tuple[int, ...] | None = None
     # Halo boundary rule: periodic wrap (True) or edge clamp (False).
     wrap: bool = True
+    # Input tiles only: ("table", axis) — the block index along ``axis`` is
+    # read at run time from the named i32 input tile's element for the
+    # current grid cell (the PagedAttention block-table idiom). The static
+    # index map's value at ``axis`` is an ignored placeholder; the table
+    # tile must have an all-ones block. The looked-up index is clamped to
+    # the block grid. Validated by the analyzer (BOUNDS_TABLE).
+    index_tile: tuple[str, int] | None = None
 
     def resolved_block(self) -> tuple[int, ...]:
         blk = tuple(self.shape) if self.block is None else tuple(self.block)
@@ -720,11 +746,20 @@ def _lower_halos(spec: Spec) -> tuple[Spec, list | None]:
 # Backend expansions
 # ---------------------------------------------------------------------------
 
-def _slice_tile(tile: Tile, arr, gids, grid):
+def _slice_tile(tile: Tile, arr, gids, grid, tables=None):
     blk = tile.resolved_block()
-    if blk == tuple(tile.shape):
+    if tile.index_tile is None and blk == tuple(tile.shape):
         return TileRef(arr)  # whole-array view: no copy, no vmap blow-up
-    bidx = tile.resolved_index(grid)(*gids)
+    bidx = list(tile.resolved_index(grid)(*gids))
+    if tile.index_tile is not None:
+        # the block index along the gathered axis comes from the table
+        # tile's element for this cell (the static map's value there is a
+        # placeholder); clamped so a corrupt table cannot read out of bounds
+        tname, axis = tile.index_tile
+        ttile, tarr = tables[tname]
+        val = _slice_tile(ttile, tarr, gids, grid).value.reshape(-1)[0]
+        nb = tile.shape[axis] // blk[axis]
+        bidx[axis] = jnp.clip(val.astype(jnp.int32), 0, nb - 1)
     starts = [i * b for i, b in zip(bidx, blk)]
     return TileRef(lax.dynamic_slice(arr, starts, blk))
 
@@ -813,10 +848,12 @@ def _expand_jnp(spec: Spec, defines: SimpleNamespace):
     zero_r = (0,) * len(spec.reduce_axes)
 
     def fn(*in_arrays):
+        tables = {t.name: (t, a) for t, a in zip(spec.inputs, in_arrays)}
+
         def cell(flat_idx):
             ogids = jnp.unravel_index(flat_idx, outer_grid) if outer_grid else ()
             pinned = [
-                _slice_tile(t, a, tuple(ogids) + zero_r, grid).value
+                _slice_tile(t, a, tuple(ogids) + zero_r, grid, tables).value
                 if h else None
                 for t, a, h in zip(spec.inputs, in_arrays, hoistable)]
             stk0 = tuple(
@@ -832,7 +869,8 @@ def _expand_jnp(spec: Spec, defines: SimpleNamespace):
                 # hoisted inputs get a FRESH TileRef per step: input refs are
                 # read-only by contract, but a stray in-body write must not
                 # leak across reduce steps
-                ins = [TileRef(p) if h else _slice_tile(t, a, gids, grid)
+                ins = [TileRef(p) if h else _slice_tile(t, a, gids, grid,
+                                                        tables)
                        for t, a, h, p in zip(spec.inputs, in_arrays,
                                              hoistable, pinned)]
                 slots, cur = [], []
@@ -884,7 +922,8 @@ def _expand_single_cell(spec: Spec, defines: SimpleNamespace, backend: str):
     gids = (0,) * len(grid)
 
     def fn(*in_arrays):
-        ins = [_slice_tile(t, a, gids, grid)
+        tables = {t.name: (t, a) for t, a in zip(spec.inputs, in_arrays)}
+        ins = [_slice_tile(t, a, gids, grid, tables)
                for t, a in zip(spec.inputs, in_arrays)]
         out0 = tuple(jnp.zeros(t.resolved_block(), t.dtype)
                      for t in spec.outputs)
@@ -910,6 +949,7 @@ def _expand_loops(spec: Spec, defines: SimpleNamespace):
     ncells = math.prod(grid)
 
     def fn(*in_arrays):
+        tables = {t.name: (t, a) for t, a in zip(spec.inputs, in_arrays)}
         outs0 = tuple(jnp.zeros(t.shape, t.dtype) for t in spec.outputs)
         scr0 = tuple(jnp.zeros(s.shape, s.dtype) for s in spec.scratch)
 
@@ -919,7 +959,8 @@ def _expand_loops(spec: Spec, defines: SimpleNamespace):
             # scratch carried across steps sees the reduce space sequentially
             # — the same visit order as the Pallas grid.
             gids = jnp.unravel_index(flat_idx, grid)
-            ins = [_slice_tile(t, a, gids, grid) for t, a in zip(spec.inputs, in_arrays)]
+            ins = [_slice_tile(t, a, gids, grid, tables)
+                   for t, a in zip(spec.inputs, in_arrays)]
             # With reduce axes, output refs see the block's CURRENT contents
             # (zeros on first visit): bodies that accumulate directly into an
             # output behave like the jnp carry / resident Pallas block.
@@ -949,17 +990,53 @@ def _expand_loops(spec: Spec, defines: SimpleNamespace):
 
 def _expand_pallas(spec: Spec, defines: SimpleNamespace, interpret: bool):
     grid = spec.grid
+    ng = len(grid)
     n_in, n_out = len(spec.inputs), len(spec.outputs)
+    tiles = {t.name: t for t in spec.inputs}
+    # index_tile tables, in first-use order (deduped): each is ALSO a regular
+    # input (the body's view is backend-identical), but its array is
+    # additionally prepended to the call as a scalar-prefetch operand whose
+    # SMEM ref the wrapped index maps read (PrefetchScalarGridSpec appends
+    # the scalar refs to every index map's grid ids).
+    table_names: list[str] = []
+    for t in spec.inputs:
+        if t.index_tile is not None and t.index_tile[0] not in table_names:
+            table_names.append(t.index_tile[0])
+    n_tab = len(table_names)
+    table_pos = [next(i for i, t in enumerate(spec.inputs) if t.name == nm)
+                 for nm in table_names]
 
     def body_adapter(*refs):
-        gids = tuple(pl.program_id(d) for d in range(len(grid)))
-        scr = refs[n_in + n_out:]
+        refs = refs[n_tab:]  # drop the scalar-prefetch refs: the tables
+        gids = tuple(pl.program_id(d) for d in range(ng))  # arrive again as
+        scr = refs[n_in + n_out:]                          # regular inputs
         ctx = Ctx("pallas", defines, gids, grid,
                   reduce_axes=spec.reduce_axes, scratch=scr)
         spec.body(ctx, *refs[: n_in + n_out])
 
+    def mk_index(t: Tile):
+        base = t.resolved_index(grid)
+        if t.index_tile is None:
+            if not n_tab:
+                return base
+            return lambda *a: base(*a[:ng])
+        tname, axis = t.index_tile
+        tindex = tiles[tname].resolved_index(grid)
+        ti = table_names.index(tname)
+        nb = t.shape[axis] // t.resolved_block()[axis]
+
+        def gather(*a):
+            ids, srefs = a[:ng], a[ng:]
+            # all-ones table block: its block index IS the element index
+            val = srefs[ti][tuple(tindex(*ids))]
+            out = list(base(*ids))
+            out[axis] = jnp.clip(val, 0, nb - 1)
+            return tuple(out)
+
+        return gather
+
     def mk_block(t: Tile):
-        return pl.BlockSpec(t.resolved_block(), t.resolved_index(grid))
+        return pl.BlockSpec(t.resolved_block(), mk_index(t))
 
     # Real-TPU pipelining: outer axes are embarrassingly parallel (validated:
     # each output block is written from exactly one outer cell), reduce axes
@@ -973,13 +1050,36 @@ def _expand_pallas(spec: Spec, defines: SimpleNamespace, interpret: bool):
         if params_cls is not None:
             kwargs["compiler_params"] = params_cls(dimension_semantics=sem)
 
+    in_specs = [mk_block(t) for t in spec.inputs]
+    out_specs = [mk_block(t) for t in spec.outputs]
+    out_shape = [jax.ShapeDtypeStruct(t.shape, t.dtype) for t in spec.outputs]
+    scratch_shapes = [pltpu.VMEM(s.shape, s.dtype) for s in spec.scratch]
+
+    if n_tab:
+        call = pl.pallas_call(
+            body_adapter,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=n_tab, grid=grid,
+                in_specs=in_specs, out_specs=out_specs,
+                scratch_shapes=scratch_shapes),
+            out_shape=out_shape,
+            interpret=interpret,
+            **kwargs,
+        )
+
+        def fn(*in_arrays):
+            tabs = [in_arrays[i] for i in table_pos]
+            return tuple(call(*tabs, *in_arrays))
+
+        return fn
+
     call = pl.pallas_call(
         body_adapter,
         grid=grid,
-        in_specs=[mk_block(t) for t in spec.inputs],
-        out_specs=[mk_block(t) for t in spec.outputs],
-        out_shape=[jax.ShapeDtypeStruct(t.shape, t.dtype) for t in spec.outputs],
-        scratch_shapes=[pltpu.VMEM(s.shape, s.dtype) for s in spec.scratch],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
         **kwargs,
     )

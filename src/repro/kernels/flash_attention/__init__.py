@@ -1,9 +1,11 @@
 from .ops import (decode_attention, flash_attention, flash_attention_fwd,
-                  flash_decode)
-from .ref import decode_ref, mha_chunked, mha_ref, rolling_slot_pos
+                  flash_decode, flash_decode_paged, paged_decode_attention)
+from .ref import (decode_ref, mha_chunked, mha_ref, paged_decode_ref,
+                  rolling_slot_pos)
 from .ring import ring_flash, ring_flash_attention, ring_merge, ring_step_ref
 
 __all__ = ["flash_attention", "flash_attention_fwd", "flash_decode",
-           "decode_attention", "mha_ref", "mha_chunked", "decode_ref",
+           "decode_attention", "flash_decode_paged", "paged_decode_attention",
+           "mha_ref", "mha_chunked", "decode_ref", "paged_decode_ref",
            "rolling_slot_pos", "ring_flash", "ring_flash_attention",
            "ring_merge", "ring_step_ref"]

@@ -454,6 +454,122 @@ def flash_decode_builder(D):
         ],
         body=body)
 
+def paged_decode_builder(D):
+    """q: (b, h, 1, d) vs a PAGED cache pool k: (P, hk, page, d),
+    v: (P, hk, page, dv), block_table: (b, NP) i32, kv_len: (b, 1) i32,
+    pos_pages: (P, page) i32 -> o: (b, h, 1, dv).
+
+    The continuous-batching decode kernel (vLLM's PagedAttention idiom
+    through the unified language): each sequence owns a per-slot list of
+    fixed-size pages scattered through a shared pool, and the KV index maps
+    READ the block table at run time — ``Tile(index_tile=("block_table",
+    0))`` — to gather logical page ``j`` of sequence ``b`` from pool page
+    ``block_table[b, j]``. ``pos_pages`` rides the pool through the same
+    table: row ``p`` carries pool page ``p``'s absolute slot positions
+    (``-1`` for never-written slots, exactly ``flash_decode``'s ``slot_pos``
+    contract), so rolling-window rotated caches and partially-filled tail
+    pages mask identically to the contiguous kernel. ``kv_len`` is
+    per-sequence — mixed prompt/generation lengths share one compiled grid.
+
+    Bit parity with :func:`flash_decode_builder`: with ``page == block_kv``
+    and pages in logical order the online-softmax visits identical blocks in
+    identical order, and fully-masked blocks are exact no-ops — so a paged
+    decode is bitwise the contiguous decode, pages scattered or not.
+
+    The ``cell_when`` whole-block skip is the contiguous kernel's, applied
+    per sequence: while un-wrapped (``kv_len <= capacity``) logical page
+    ``j`` holds positions ``[j*page, (j+1)*page)``; never-allocated tail
+    pages point at the engine's null page, whose positions are all ``-1``."""
+    b, h, hk = D.b, D.h, D.hk
+    d, dv = D.d, D.dv
+    npages, page, nsp = D.npages, D.page, D.nseq_pages
+    window = D.window
+    sm_scale = D.sm_scale
+    g = h // hk
+    cap = nsp * page                       # per-sequence slot capacity
+    dtype = jnp.dtype(D.dtype)
+
+    def body(ctx, q_ref, k_ref, v_ref, tab_ref, len_ref, sp_ref, o_ref):
+        m_scr, l_scr, acc_scr = ctx.scratch
+        j = ctx.reduce_id(0)
+
+        @ctx.when(ctx.is_first)
+        def _init():
+            m_scr[...] = jnp.full(m_scr.shape, _NEG_INF, jnp.float32)
+            l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+            acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+        q_pos = len_ref[0, 0] - 1            # this sequence's query position
+        run = (j * page) <= q_pos
+        if window is not None:
+            run &= (q_pos - (j * page + page - 1)) < window
+        # wrapped rotated cache: slots lose positional order, every page may
+        # hold live (recent) tokens — the positional skip no longer applies
+        run |= q_pos >= cap
+
+        @ctx.cell_when(run)
+        def _step():
+            sp = sp_ref[0]                   # (page,) absolute slot positions
+            q = q_ref[0, 0].astype(jnp.float32)          # (1, d)
+            k = k_ref[0, 0].astype(jnp.float32)          # (page, d)
+            s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+            mask = ((sp >= 0) & (sp <= q_pos))[None, :]  # (1, page)
+            if window is not None:
+                mask &= ((q_pos - sp) < window)[None, :]
+            s = jnp.where(mask, s, _NEG_INF)
+            m_prev = m_scr[:, :1]
+            l_prev = l_scr[:, :1]
+            m_cur = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+            corr = jnp.where(m_prev == _NEG_INF, 0.0, jnp.exp(m_prev - m_cur))
+            p = jnp.exp(s - m_cur)
+            p = jnp.where(mask, p, 0.0)
+            v = v_ref[0, 0].astype(jnp.float32)
+            acc_scr[...] = acc_scr[...] * corr + lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            l_scr[:, :1] = l_prev * corr + p.sum(-1, keepdims=True)
+            m_scr[:, :1] = m_cur
+
+        @ctx.when(ctx.is_last)
+        def _fin():
+            l = l_scr[:, :1]
+            o_ref[0, 0] = (acc_scr[...] /
+                           jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+    return Spec(
+        "flash_decode_paged",
+        grid=(b, h, nsp),
+        reduce_axes=(2,),
+        scratch=[Scratch((1, 128), jnp.float32),   # m
+                 Scratch((1, 128), jnp.float32),   # l
+                 Scratch((1, dv), jnp.float32)],   # acc
+        inputs=[
+            Tile("q", (b, h, 1, d), dtype, block=(1, 1, 1, d),
+                 index=lambda b_, h_, j: (b_, h_, 0, 0)),
+            # pool page axis: dynamic, read from the block table per cell
+            # (the static map's 0 there is the ignored placeholder)
+            Tile("k", (npages, hk, page, d), dtype, block=(1, 1, page, d),
+                 index=lambda b_, h_, j: (0, h_ // g, 0, 0),
+                 index_tile=("block_table", 0)),
+            Tile("v", (npages, hk, page, dv), dtype, block=(1, 1, page, dv),
+                 index=lambda b_, h_, j: (0, h_ // g, 0, 0),
+                 index_tile=("block_table", 0)),
+            Tile("block_table", (b, nsp), jnp.int32, block=(1, 1),
+                 index=lambda b_, h_, j: (b_, j)),
+            Tile("kv_len", (b, 1), jnp.int32, block=(1, 1),
+                 index=lambda b_, h_, j: (b_, 0)),
+            Tile("pos_pages", (npages, page), jnp.int32, block=(1, page),
+                 index=lambda b_, h_, j: (0, 0),
+                 index_tile=("block_table", 0)),
+        ],
+        outputs=[
+            Tile("o", (b, h, 1, dv), dtype, block=(1, 1, 1, dv),
+                 index=lambda b_, h_, j: (b_, h_, 0, 0)),
+        ],
+        body=body)
+
+
 # ---------------------------------------------------------------------------
 # ring attention: one ring step, offsets as dynamic inputs
 # ---------------------------------------------------------------------------

@@ -13,6 +13,17 @@ online-softmax kernel specialized to one query row, with TWO dynamic inputs
 each cache slot to its absolute position, so rotated rolling-window caches
 run the same kernel (no grad needed at serving time). ``decode_attention``
 is its thin public wrapper.
+
+``flash_decode_paged`` is the continuous-batching variant: KV lives in a
+POOL of fixed-size pages shared by every sequence, and a per-sequence
+``block_table`` (the vLLM PagedAttention idiom) is declared as a
+tile-indexed index map (``Tile(index_tile=...)``) — the kernel's K/V index
+maps read the table at runtime to gather non-contiguous pages, on every
+backend, with the indirection analyzer-bounds-checked (``BOUNDS_TABLE``)
+and cost-priced as a gather. ``paged_decode_attention`` is its wrapper.
+There is no kernel-side tuning knob: the block size IS the page size, a
+property of the pool layout the serving engine owns (it adopts
+``flash_decode``'s tuned ``block_kv`` winner as its page size).
 """
 
 from __future__ import annotations
@@ -22,10 +33,12 @@ import math
 import jax.numpy as jnp
 
 from repro.core import OpVJP, define_op, fit_block
-from .kernel import flash_attention_bwd, flash_decode_builder, flash_fwd_builder
-from .ref import decode_ref, mha_ref
+from .kernel import (flash_attention_bwd, flash_decode_builder,
+                     flash_fwd_builder, paged_decode_builder)
+from .ref import decode_ref, mha_ref, paged_decode_ref
 
 __all__ = ["flash_attention", "flash_decode", "decode_attention",
+           "flash_decode_paged", "paged_decode_attention",
            "flash_attention_fwd"]
 
 
@@ -222,6 +235,136 @@ flash_decode = define_op(
     -1 = empty) gives each cache slot's absolute position for ROTATED
     rolling-window caches (slot = pos % W); omitted, slots are positional.""",
 )
+
+
+# ---------------------------------------------------------------------------
+# paged single-token decode (continuous batching)
+# ---------------------------------------------------------------------------
+
+def _paged_pre(args, params):
+    # read-only on params (.get, never .pop) — same contract as _decode_pre
+    q, k, v = args
+    npages, _, page, _ = k.shape
+    b = q.shape[0]
+    table = params.get("block_table")
+    if table is None:
+        raise ValueError(
+            "flash_decode_paged: block_table= is required — per-sequence "
+            "page indices into the pool, shape (B, n_seq_pages) i32")
+    table = jnp.asarray(table, jnp.int32)
+    if table.ndim == 1:
+        table = table[None]
+    nsp = table.shape[-1]
+    table = table.reshape(b, nsp)
+    kv_len = params.get("kv_len")
+    if kv_len is None:
+        kv_len = nsp * page                  # full logical capacity valid
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(-1)
+    if kv_len.shape[0] == 1:
+        kv_len = jnp.broadcast_to(kv_len, (b,))
+    kv_len = kv_len.reshape(b, 1)
+    pos = params.get("pos_pages")
+    if pos is None:
+        # positional default: logical block j of sequence b holds absolute
+        # positions [j*page, (j+1)*page), scattered through the table into
+        # pool layout. Pages no sequence's valid prefix reaches stay -1
+        # (empty), so junk table entries past kv_len can never score.
+        logical = jnp.arange(nsp * page, dtype=jnp.int32).reshape(nsp, page)
+        valid = (jnp.arange(nsp, dtype=jnp.int32) * page)[None, :] < kv_len
+        tgt = jnp.where(valid, table, npages)        # sentinel rows drop
+        pos = jnp.full((npages, page), -1, jnp.int32).at[tgt.reshape(-1)].set(
+            jnp.broadcast_to(logical, (b, nsp, page)).reshape(-1, page),
+            mode="drop")
+    pos = jnp.asarray(pos, jnp.int32).reshape(npages, page)
+    return q, k, v, table, kv_len, pos
+
+
+def _paged_defines(args, params):
+    q, k, v, table, kv_len, pos = args
+    b, h, one, d = q.shape
+    if one != 1:
+        raise ValueError(f"flash_decode_paged: expected a single query token, "
+                         f"got q of shape {q.shape}")
+    npages, hk, page, _ = k.shape
+    dv = v.shape[-1]
+    if h % hk:
+        raise ValueError(f"flash_decode_paged: {h} query heads not a multiple "
+                         f"of {hk} kv heads")
+    if q.dtype != k.dtype or q.dtype != v.dtype:
+        raise ValueError(f"flash_decode_paged: dtypes disagree "
+                         f"({q.dtype}/{k.dtype}/{v.dtype})")
+    if tuple(v.shape[:3]) != (npages, hk, page):
+        raise ValueError(f"flash_decode_paged: v pool shape {v.shape} does "
+                         f"not match k pool {k.shape}")
+    nsp = table.shape[-1]
+    if tuple(pos.shape) != (npages, page):
+        raise ValueError(f"flash_decode_paged: pos_pages shape {pos.shape} "
+                         f"does not match the pool ({npages} pages of "
+                         f"{page} slots)")
+    sm_scale = params["sm_scale"]
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    window = params["window"]
+    return dict(
+        b=b, h=h, hk=hk, d=d, dv=dv, npages=npages, page=page,
+        nseq_pages=nsp,
+        window=None if window is None else int(window),
+        sm_scale=float(sm_scale),
+        dtype=jnp.dtype(q.dtype).name)
+
+
+def _paged_tune_ref(args, params):
+    q, k, v, table, kv_len, pos = args
+    return paged_decode_ref(q, k, v, block_table=table, kv_len=kv_len,
+                            pos_pages=pos, window=params["window"],
+                            sm_scale=params["sm_scale"])
+
+
+def _paged_example(rng):
+    import numpy as np
+
+    q = rng.randn(1, 4, 1, 32).astype("float32")
+    k = rng.randn(8, 2, 32, 32).astype("float32")
+    v = rng.randn(8, 2, 32, 32).astype("float32")
+    table = np.array([[1, 3, 2, 5]], np.int32)   # non-contiguous pages
+    return (q, k, v), dict(block_table=table, kv_len=100)
+
+
+flash_decode_paged = define_op(
+    "flash_decode_paged",
+    builder=paged_decode_builder,
+    ref=paged_decode_ref,
+    derive_defines=_paged_defines,
+    pre=_paged_pre,
+    defaults=dict(window=None, sm_scale=None),
+    array_params=("block_table", "kv_len", "pos_pages"),
+    # the array params ride ref_params too: the oracle needs the table
+    ref_params=("window", "sm_scale", "block_table", "kv_len", "pos_pages"),
+    tune_ref=_paged_tune_ref,
+    sweep=dict(),             # the page size IS the block size (pool layout)
+    example=_paged_example,
+    doc="""Paged single-token decode attention: q (B,H,1,D) against page
+    POOLS k (P,Hk,page,D) / v (P,Hk,page,Dv), gathered through a per-sequence
+    ``block_table`` ((B,n_seq_pages) i32) read by the kernel's index maps at
+    runtime (a tile-indexed index map — no contiguous copy on any backend).
+    ``kv_len`` ((B,) i32) is per-sequence; ``pos_pages`` ((P,page) i32, -1 =
+    empty) gives pool slots' absolute positions for rotated-window layouts;
+    omitted, logical order is positional.""",
+)
+
+
+def paged_decode_attention(q, k_pages, v_pages, *, block_table, kv_len=None,
+                           pos_pages=None, window=None, sm_scale=None,
+                           backend="auto", interpret=None):
+    """Paged decode attention over a shared KV page pool (no grad).
+
+    The serving-engine hot path: each sequence reads its KV through its
+    ``block_table`` row, so mixed-length continuous batches share one pool
+    with zero copying (see ``flash_decode_paged``)."""
+    return flash_decode_paged(
+        q, k_pages, v_pages, block_table=block_table, kv_len=kv_len,
+        pos_pages=pos_pages, window=window, sm_scale=sm_scale,
+        backend=backend, interpret=interpret)
 
 
 def decode_attention(q, k, v, *, window=None, sm_scale=None, block_kv=None,

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["mha_ref", "decode_ref", "rolling_slot_pos"]
+__all__ = ["mha_ref", "decode_ref", "paged_decode_ref", "rolling_slot_pos"]
 
 
 def rolling_slot_pos(window: int, t: int):
@@ -153,5 +153,57 @@ def decode_ref(q, k, v, *, window=None, sm_scale=None, kv_len=None,
     denom = p.sum(-1, keepdims=True)
     p = p / jnp.where(denom == 0, 1.0, denom)
     o = jnp.einsum("bkgm,bkmd->bkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, h, 1, dv).astype(q.dtype)
+
+
+def paged_decode_ref(q, k_pages, v_pages, *, block_table, kv_len=None,
+                     pos_pages=None, window=None, sm_scale=None):
+    """Paged single-token decode oracle: q (B, H, 1, D) against page POOLS.
+
+    The cache is a pool of fixed-size pages shared by every sequence —
+    k_pages (P, Hk, page, D), v_pages (P, Hk, page, Dv) — and each sequence
+    owns the pages its ``block_table`` row names: block_table (B, n_seq_pages)
+    i32, logical block j of sequence b living in pool page block_table[b, j].
+    ``kv_len`` ((B,) or (B, 1) i32) is each sequence's valid prefix length;
+    ``pos_pages`` ((P, page) i32, -1 = empty) gives each pool slot's absolute
+    position (rotated-window layouts); omitted, logical order is positional.
+    This is the function ``flash_decode_paged`` computes; per-sequence it
+    equals ``decode_ref`` on the gathered contiguous cache."""
+    b, h, _, d = q.shape
+    npages, hk, page, _ = k_pages.shape
+    dv = v_pages.shape[-1]
+    g = h // hk
+    if sm_scale is None:
+        sm_scale = 1.0 / d ** 0.5
+    tab = jnp.asarray(block_table, jnp.int32).reshape(b, -1)
+    nsp = tab.shape[1]
+    m = nsp * page
+    if kv_len is None:
+        kv_len = m
+    n = jnp.asarray(kv_len, jnp.int32).reshape(-1)
+    if n.shape[0] == 1:
+        n = jnp.broadcast_to(n, (b,))
+    n = n.reshape(b)
+    # gather each sequence's pages into logical-contiguous (B, Hk, m, D)
+    kb = jnp.moveaxis(k_pages[tab], 2, 1).reshape(b, hk, m, d)
+    vb = jnp.moveaxis(v_pages[tab], 2, 1).reshape(b, hk, m, dv)
+    if pos_pages is None:
+        sp = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), (b, m))
+    else:
+        sp = jnp.asarray(pos_pages, jnp.int32)[tab].reshape(b, m)
+    q_pos = n - 1                                          # (B,)
+    mask = (sp >= 0) & (sp <= q_pos[:, None])
+    if window is not None:
+        mask &= (q_pos[:, None] - sp) < window
+    qg = q.reshape(b, hk, g, d)
+    s = jnp.einsum("bkgd,bkmd->bkgm", qg, kb,
+                   preferred_element_type=jnp.float32) * sm_scale
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = jnp.where(mask[:, None, None], p, 0.0)
+    denom = p.sum(-1, keepdims=True)
+    p = p / jnp.where(denom == 0, 1.0, denom)
+    o = jnp.einsum("bkgm,bkmd->bkgd", p.astype(vb.dtype), vb,
                    preferred_element_type=jnp.float32)
     return o.reshape(b, h, 1, dv).astype(q.dtype)

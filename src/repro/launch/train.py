@@ -49,15 +49,13 @@ def validate_host_batch(tokens, vocab_size: int):
 
 
 def apply_tuned_winners(cfg, global_batch: int, seq_len: int):
-    """Train warmup: adopt persisted ``op.tune`` winners for the train-step
-    shapes — causal flash attention at the full sequence and the fused-CE
-    LM head at ``B*(S-1)`` rows — before the step traces (the traced kernels
-    bake in whatever block sizes the ops resolve to). A pure cache lookup
-    (``$REPRO_CACHE_DIR``); run ``python -m repro.tune_cli --arch ... --train``
-    once per fleet hardware to populate it. Returns ``{op_name: winner}``."""
-    from repro.launch.tuning import adopt_winners, train_probes
+    """DEPRECATED shim: use ``repro.launch.tuning.adopt(cfg, shapes,
+    kind="train")`` — one adoption surface now covers the serve/train/mesh
+    probe families. Kept for callers of the old per-launcher name."""
+    from repro.launch.tuning import adopt
 
-    return adopt_winners(train_probes(cfg, global_batch, seq_len))
+    return adopt(cfg, dict(global_batch=global_batch, seq_len=seq_len),
+                 kind="train")
 
 
 @dataclasses.dataclass

@@ -4,14 +4,18 @@ One place derives the kernel-op shapes a workload will hit — serving
 (prefill flash + decode flash + fused LM head at batch rows) and training
 (causal flash at the train sequence + fused-CE LM head at ``B*(S-1)`` rows)
 — as ``{op_name: (ShapeDtypeStruct args, params)}`` probe dicts, and one
-place (:func:`adopt_winners`) turns persisted ``op.tune`` winners for those
-probes into updated op defaults. Consumers:
+place (:func:`adopt`) turns persisted ``op.tune`` winners for those probes
+into updated op defaults, keyed by workload kind. Consumers:
 
-  * ``launch.serve.apply_tuned_winners``   warmup before the serve steps trace
-  * ``launch.train.apply_tuned_winners``   warmup before the train step traces
-  * ``repro.tune_cli``                     materializes the probes as real
-                                           arrays and runs the sweeps — the
-                                           fleet-wide pre-tuning entry point
+  * ``tuning.adopt(cfg, shapes, kind=...)``  THE warmup surface — serve /
+                                             train / mesh launchers (their
+                                             old ``apply_tuned_winners``
+                                             names are deprecated shims)
+  * ``repro.serving.Engine``                 adopts flash_decode's winner
+                                             as its page size
+  * ``repro.tune_cli``                       materializes the probes as real
+                                             arrays and runs the sweeps — the
+                                             fleet-wide pre-tuning entry point
 
 Probes are SHAPES ONLY (``jax.ShapeDtypeStruct``): ``Op.cached_winner`` is a
 pure cache lookup, so adoption performs zero builds and zero timed sweeps.
@@ -21,8 +25,12 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["serving_probes", "train_probes", "mesh_probes", "adopt_winners"]
+from repro.core.device import fit_block
+
+__all__ = ["adopt", "serving_probes", "train_probes", "mesh_probes",
+           "adopt_winners"]
 
 
 def _head_dims(cfg):
@@ -64,6 +72,24 @@ def serving_probes(cfg, batch: int, prompt_len: int, max_len: int) -> dict:
              probe((batch, hk, m, hd), dtype),
              probe((batch, hk, m, hd), dtype)),
             dict(window=window))
+        if not window:
+            # paged decode (the continuous-batching engine path). The op has
+            # no kernel-side sweep — the page size IS the pool layout, and
+            # the engine adopts flash_decode's tuned block_kv as its page
+            # size — but the probe keeps the engine shapes visible to the
+            # CLI / analyze sweeps. Block-table params are REAL arrays (the
+            # op's pre hook reads them), sized for ``batch`` full sequences.
+            page = fit_block(512, max_len)
+            nsp = max_len // page
+            npages = batch * nsp + 1          # + the reserved null page 0
+            tab = (np.arange(batch * nsp, dtype=np.int32)
+                   .reshape(batch, nsp) + 1)
+            probes["flash_decode_paged"] = (
+                (probe((batch, h, 1, hd), dtype),
+                 probe((npages, hk, page, hd), dtype),
+                 probe((npages, hk, page, hd), dtype)),
+                dict(block_table=tab,
+                     kv_len=np.full((batch,), max_len, np.int32)))
     (x, w), _ = _lm_head_shapes(cfg, batch)
     probes["lm_head_logits"] = ((x, w), dict(vocab=cfg.vocab_size))
     return probes
@@ -135,6 +161,32 @@ def _winner_overflows(op, args, params, winner) -> bool:
         return vmem_footprint(spec)[0] > vmem_budget()
     except Exception:
         return False
+
+
+def adopt(cfg, shapes: dict, *, kind: str) -> dict:
+    """THE adoption surface: build ``kind``'s probe shapes and adopt their
+    persisted tune winners into the op defaults. ``shapes`` carries the
+    workload dims by name:
+
+      kind="serve"  ->  batch, prompt_len, max_len
+      kind="train"  ->  global_batch, seq_len
+      kind="mesh"   ->  batch, prompt_len, shards [, mesh_axis]
+
+    Replaces the three per-launcher ``apply_tuned_winners`` wrappers (which
+    now delegate here, with deprecation notes). Returns the adopted
+    ``{op_name: winner_defines}``."""
+    if kind == "serve":
+        probes = serving_probes(cfg, shapes["batch"], shapes["prompt_len"],
+                                shapes["max_len"])
+    elif kind == "train":
+        probes = train_probes(cfg, shapes["global_batch"], shapes["seq_len"])
+    elif kind == "mesh":
+        probes = mesh_probes(cfg, shapes["batch"], shapes["prompt_len"],
+                             shards=shapes["shards"],
+                             mesh_axis=shapes.get("mesh_axis", "model"))
+    else:
+        raise ValueError(f"adopt: kind must be serve|train|mesh, got {kind!r}")
+    return adopt_winners(probes)
 
 
 def adopt_winners(probes: dict) -> dict:

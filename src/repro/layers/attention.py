@@ -17,7 +17,9 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import (decode_attention, decode_ref,
                                            flash_attention, mha_chunked,
-                                           mha_ref, ring_flash_attention)
+                                           mha_ref, paged_decode_attention,
+                                           paged_decode_ref,
+                                           ring_flash_attention)
 from repro.parallel.context import current_rules, shard_activation
 from repro.parallel.rules import ring_axis_for
 
@@ -26,7 +28,7 @@ from .rope import apply_rope
 
 __all__ = [
     "gqa_init", "gqa_forward", "gqa_cache_init", "gqa_prefill_cache",
-    "gqa_decode",
+    "gqa_decode", "gqa_paged_cache_init", "gqa_paged_decode",
     "mla_init", "mla_forward", "mla_cache_init", "mla_prefill_cache",
     "mla_decode",
 ]
@@ -198,6 +200,55 @@ def gqa_decode(params, x, cache, cfg):
                        sm_scale=hd ** -0.5)
     y = o.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ params["wo"]
     return y, cache
+
+
+def gqa_paged_cache_init(cfg, num_pages, page_size, dtype):
+    """Per-layer paged KV pools. Page 0 is the NULL page: inactive batch
+    slots' block tables point at it and their per-step writes land there,
+    so one compiled decode step serves any mix of live/idle slots."""
+    hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "kp": jnp.zeros((num_pages, hk, page_size, hd), dtype),
+        "vp": jnp.zeros((num_pages, hk, page_size, hd), dtype),
+    }
+
+
+def gqa_paged_decode(params, x, cache, cfg, *, table, lens, pos_pages,
+                     page_ids, offs):
+    """One-token decode over a PAGED cache. x: (B, 1, d_model).
+
+    The KV pools are shared by every sequence; ``table`` ((B, n_seq_pages)
+    i32) names each sequence's pages in logical order, ``lens`` ((B,) i32)
+    its current length (the new token's position), ``pos_pages`` ((P, page)
+    i32) the pool-slot -> absolute-position map (already including the new
+    token), and ``page_ids``/``offs`` ((B,) each) the pool coordinates of
+    the write — derived once per step by the model, not per layer. Returns
+    (y, new {kp, vp}); attention reads KV exclusively through the block
+    table (``flash_decode_paged``'s tile-indexed index maps — no contiguous
+    gather on any backend)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k1, v1 = _qkv(params, x, cfg)
+    if cfg.pos_embed == "rope":
+        p = lens[:, None, None]                 # per-sequence positions
+        q = apply_rope(q, p, cfg.rope_theta)
+        k1 = apply_rope(k1, p, cfg.rope_theta)
+    kp, vp = cache["kp"], cache["vp"]
+    kp = kp.at[page_ids, :, offs].set(k1[:, :, 0].astype(kp.dtype))
+    vp = vp.at[page_ids, :, offs].set(v1[:, :, 0].astype(vp.dtype))
+    kv_len = lens + 1
+    if kernel_backend() == "pallas":
+        o = paged_decode_attention(q, kp, vp, block_table=table,
+                                   kv_len=kv_len, pos_pages=pos_pages,
+                                   window=cfg.window if cfg.window else None,
+                                   sm_scale=hd ** -0.5)
+    else:
+        o = paged_decode_ref(q, kp, vp, block_table=table, kv_len=kv_len,
+                             pos_pages=pos_pages,
+                             window=cfg.window if cfg.window else None,
+                             sm_scale=hd ** -0.5)
+    y = o.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ params["wo"]
+    return y, {"kp": kp, "vp": vp}
 
 
 # ===========================================================================

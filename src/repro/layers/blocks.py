@@ -19,7 +19,7 @@ from .moe import moe_forward, moe_init
 
 __all__ = [
     "tblock_init", "tblock_forward", "tblock_prefill", "tblock_decode",
-    "tblock_cache_init",
+    "tblock_cache_init", "tblock_paged_decode", "tblock_paged_cache_init",
     "mamba_block_init", "mamba_block_forward", "mamba_block_prefill",
     "mamba_block_decode", "mamba_block_cache_init",
     "ZERO_AUX",
@@ -114,6 +114,24 @@ def tblock_decode(params, x, cache, cfg, *, moe=False, dispatch="einsum"):
     x = x + a
     y, aux = _ffn(params, x, cfg, moe, dispatch)
     return x + y, cache
+
+
+def tblock_paged_decode(params, x, cache, cfg, *, moe=False, dispatch="einsum",
+                        table, lens, pos_pages, page_ids, offs):
+    """``tblock_decode`` over a paged KV pool (GQA only — MLA's latent cache
+    is gated off upstream by ``LM.init_paged_cache``)."""
+    h = rmsnorm(x, params["norm1"], eps=cfg.norm_eps)
+    a, cache = attn.gqa_paged_decode(params["attn"], h, cache, cfg,
+                                     table=table, lens=lens,
+                                     pos_pages=pos_pages,
+                                     page_ids=page_ids, offs=offs)
+    x = x + a
+    y, aux = _ffn(params, x, cfg, moe, dispatch)
+    return x + y, cache
+
+
+def tblock_paged_cache_init(cfg, num_pages, page_size, dtype):
+    return attn.gqa_paged_cache_init(cfg, num_pages, page_size, dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -63,7 +63,7 @@ def build_program(cfg: ArchConfig) -> list[StackSpec]:
 class LM:
     def __init__(self, cfg: ArchConfig, *, remat: str = "none",
                  moe_dispatch: str = "einsum", scan_layers: bool = True,
-                 ce_chunks: int = 1, fused_head: bool = False,
+                 ce_chunks: int = 1, fused_head: bool = True,
                  head_backend: str = "auto"):
         assert remat in ("none", "full", "dots")
         self.cfg = cfg
@@ -81,6 +81,9 @@ class LM:
         # _logits/decode use lm_head_logits (logits + row max + greedy argmax
         # from the same pass). head_backend picks the kernel expansion
         # ("auto" = pallas, or $REPRO_BACKEND).
+        # DEPRECATION: the default flipped False -> True — the fused head is
+        # the served configuration. Pass fused_head=False explicitly to keep
+        # the einsum + pad-mask reference head (tests do, as the baseline).
         self.fused_head = fused_head
         self.head_backend = head_backend
         # scan_layers=False unrolls the layer loops (python for). Used by the
@@ -506,3 +509,99 @@ class LM:
 
     def greedy_token(self, logits):
         return jnp.argmax(logits[..., :self.cfg.vocab_size], axis=-1)
+
+    # -------------------------------------------------------- paged decoding
+    @property
+    def pageable(self) -> bool:
+        """True when the program can decode against a paged KV pool: pure
+        attention stacks (dense/moe) with GQA, rope positions and no rolling
+        window. SSM state is O(1) (nothing to page), MLA's latent cache and
+        rotated windowed caches use different layouts."""
+        cfg = self.cfg
+        return (all(s.kind in ("dense", "moe") for s in self.program)
+                and cfg.attn_type != "mla" and not cfg.window
+                and cfg.pos_embed == "rope")
+
+    def init_paged_cache(self, batch, num_pages, page_size, nseq_pages,
+                         dtype=None):
+        """A paged decode cache: per-layer KV pools of ``num_pages`` fixed
+        ``page_size``-token pages shared by all ``batch`` slots, plus the
+        per-slot block tables (``nseq_pages`` logical pages each), lengths,
+        and the pool-wide slot -> absolute-position map. Page 0 is reserved
+        as the NULL page (idle slots point at it; its positions stay -1)."""
+        if not self.pageable:
+            raise ValueError(
+                "paged decode needs an attention-only GQA program with rope "
+                "positions and no rolling window "
+                f"(program={[s.kind for s in self.program]}, "
+                f"attn_type={self.cfg.attn_type}, window={self.cfg.window}, "
+                f"pos_embed={self.cfg.pos_embed})")
+        dtype = dtype or self.dtype
+
+        def stacked(n, single):
+            return jax.tree.map(lambda a: jnp.zeros((n,) + a.shape, a.dtype),
+                                single)
+
+        stacks = [stacked(s.n, blocks.tblock_paged_cache_init(
+                      self.cfg, num_pages, page_size, dtype))
+                  for s in self.program]
+        return {"table": jnp.zeros((batch, nseq_pages), jnp.int32),
+                "len": jnp.zeros((batch,), jnp.int32),
+                "pos_pages": jnp.full((num_pages, page_size), -1, jnp.int32),
+                "stacks": stacks}
+
+    def _paged_decode_hidden(self, params, tokens, cache):
+        """One paged decode step up to the final norm. Every slot decodes
+        every step — idle slots carry len 0 and a zero block table, writing
+        into and reading from the null page (their output is ignored)."""
+        cfg = self.cfg
+        table, lens = cache["table"], cache["len"]
+        pos_pages = cache["pos_pages"]
+        b, nsp = table.shape
+        pg = pos_pages.shape[1]
+        # pool coordinates of this step's KV write, shared by every layer
+        page_ids = table[jnp.arange(b), jnp.clip(lens // pg, 0, nsp - 1)]
+        offs = lens % pg
+        # stamp the new positions; the null page is pinned to -1 so idle
+        # slots' writes never masquerade as valid history for live tables
+        pos_pages = pos_pages.at[page_ids, offs].set(lens).at[0].set(-1)
+        x = self._embed(params, tokens)
+        new_stacks = []
+        for spec, sp, sc in zip(self.program, params["stacks"],
+                                cache["stacks"]):
+            moe = spec.kind == "moe"
+
+            def body(x, args, moe=moe):
+                lp, lc = args
+                y, nc = blocks.tblock_paged_decode(
+                    lp, x, lc, cfg, moe=moe, dispatch=self.moe_dispatch,
+                    table=table, lens=lens, pos_pages=pos_pages,
+                    page_ids=page_ids, offs=offs)
+                return y, nc
+
+            x, nc = self._scan_or_loop(body, x, (sp, sc), spec.n)
+            new_stacks.append(nc)
+        x = rmsnorm(x, params["final_norm"], eps=cfg.norm_eps)
+        return x, dict(cache, len=lens + 1, pos_pages=pos_pages,
+                       stacks=new_stacks)
+
+    def paged_decode_step(self, params, tokens, cache):
+        """One paged decode token for every slot. tokens: (B, 1). Returns
+        (logits (B, Vpad), new_cache)."""
+        x, new_cache = self._paged_decode_hidden(params, tokens, cache)
+        logits = self._logits(params, x)[:, 0]
+        return logits, new_cache
+
+    def paged_greedy_step(self, params, tokens, cache):
+        """Paged twin of ``greedy_step``: (next (B,), logits, new_cache)."""
+        x, new_cache = self._paged_decode_hidden(params, tokens, cache)
+        if not self.fused_head:
+            logits = self._logits(params, x)[:, 0]
+            return self.greedy_token(logits), logits, new_cache
+        b, s, d = x.shape
+        logits, _m, arg = lm_head_logits.raw(
+            x.reshape(b, d), self._head(params).astype(x.dtype),
+            vocab=self.cfg.vocab_size, backend=self.head_backend)
+        logits = shard_activation(logits[:b].reshape(b, 1, self.vpad),
+                                  "act_btv")[:, 0]
+        return arg[:b, 0], logits, new_cache

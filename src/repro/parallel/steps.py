@@ -20,8 +20,9 @@ from repro.parallel import rules as R
 from repro.parallel.context import Rules, use_rules
 
 __all__ = [
-    "axis_names", "make_shardings", "cache_pspecs", "build_train_step",
-    "build_prefill_step", "build_serve_step",
+    "axis_names", "make_shardings", "cache_pspecs", "paged_cache_pspecs",
+    "build_train_step", "build_prefill_step", "build_serve_step",
+    "build_paged_serve_step",
 ]
 
 
@@ -262,14 +263,17 @@ def build_prefill_step(model, mesh: Mesh, *, batch: int, max_len: int,
 
 
 def build_serve_step(model, mesh: Mesh, *, batch: int, max_len: int,
-                     greedy: bool = False):
+                     greedy: bool = True):
     """One-token decode step over a sharded cache.
 
-    ``greedy=False`` (the default) steps via ``model.decode_step`` ->
-    (logits, cache), leaving sampling to the host. ``greedy=True`` routes
-    through ``model.greedy_step`` -> (next_token, logits, cache): with a
-    fused LM head the argmax comes out of the logits kernel itself, so the
-    host loop feeds tokens straight back without a device round-trip."""
+    ``greedy=True`` (the default — DEPRECATION: flipped from False, the
+    served configuration is greedy + fused head; pass greedy=False
+    explicitly for host-side sampling) routes through ``model.greedy_step``
+    -> (next_token, logits, cache): with a fused LM head the argmax comes
+    out of the logits kernel itself, so the host loop feeds tokens straight
+    back without a device round-trip. ``greedy=False`` steps via
+    ``model.decode_step`` -> (logits, cache), leaving sampling to the
+    host."""
     param_sh, pspecs, act_rules, _ = make_shardings(model, mesh)
     c_pspecs = cache_pspecs(model, mesh, batch, max_len)
     cache_sh = _named(mesh, c_pspecs)
@@ -289,6 +293,56 @@ def build_serve_step(model, mesh: Mesh, *, batch: int, max_len: int,
         def serve(params, cache, tokens):
             with use_rules(act_rules):
                 return model.decode_step(params, tokens, cache)
+        out_sh = (None, cache_sh)
+
+    jit_fn = jax.jit(serve, in_shardings=(param_sh, cache_sh, tok_sh),
+                     out_shardings=out_sh, donate_argnums=(1,))
+    return jit_fn, {"params": param_sh, "cache": cache_sh, "tokens": tok_sh,
+                    "cache_pspecs": c_pspecs, "pspecs": pspecs,
+                    "rules": act_rules, "greedy": greedy}
+
+
+def paged_cache_pspecs(model, mesh: Mesh, batch: int):
+    """Partition specs for a paged decode cache. The page axis of the pools
+    is a POOL dimension (any sequence's page can live anywhere), so it never
+    shards over batch axes; kv heads shard over the model axis when they
+    divide it, else the pool replicates (paged decode targets serving
+    batches, where the pool is small next to the params). Tables, lengths
+    and the position map are host-managed control state: replicated."""
+    cfg = model.cfg
+    _, m = axis_names(mesh)
+    msize = mesh.shape[m]
+    hk = max(cfg.n_kv_heads, 1)
+    head_ax = m if hk % msize == 0 else None
+    pool = {"kp": P(None, None, head_ax, None, None),
+            "vp": P(None, None, head_ax, None, None)}
+    return {"table": P(), "len": P(), "pos_pages": P(),
+            "stacks": [dict(pool) for _ in model.program]}
+
+
+def build_paged_serve_step(model, mesh: Mesh, *, batch: int,
+                           greedy: bool = True):
+    """One-token decode step over PAGED KV pools (the continuous-batching
+    engine's inner loop). The cache (pools + block tables + lengths +
+    pos_pages) is a single donated pytree; the host mutates only the control
+    state (tables/lengths) between steps via the serving scheduler."""
+    if not model.pageable:
+        raise ValueError("build_paged_serve_step: model is not pageable "
+                         "(see LM.pageable)")
+    param_sh, pspecs, act_rules, _ = make_shardings(model, mesh)
+    c_pspecs = paged_cache_pspecs(model, mesh, batch)
+    cache_sh = _named(mesh, c_pspecs)
+    tok_sh = NamedSharding(mesh, P(None, None))
+
+    if greedy:
+        def serve(params, cache, tokens):
+            with use_rules(act_rules):
+                return model.paged_greedy_step(params, tokens, cache)
+        out_sh = (None, None, cache_sh)
+    else:
+        def serve(params, cache, tokens):
+            with use_rules(act_rules):
+                return model.paged_decode_step(params, tokens, cache)
         out_sh = (None, cache_sh)
 
     jit_fn = jax.jit(serve, in_shardings=(param_sh, cache_sh, tok_sh),

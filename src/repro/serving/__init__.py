@@ -1,0 +1,9 @@
+"""Continuous-batching serving: paged KV pools, page allocator, scheduler
+and the :class:`Engine` that keeps one jitted decode step running over
+mixed prompt/generation-length traffic."""
+
+from .engine import Engine
+from .pages import PageAllocator
+from .scheduler import Request, Scheduler
+
+__all__ = ["Engine", "PageAllocator", "Request", "Scheduler"]

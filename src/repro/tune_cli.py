@@ -3,7 +3,7 @@
 Sweeps registered ops' tuning knobs on real shapes and persists the winners
 under ``$REPRO_CACHE_DIR`` (default ``~/.cache/repro-occa``); every later
 ``launch.serve`` / ``launch.train`` on the same hardware adopts them for
-free at warmup (``apply_tuned_winners`` — a pure cache lookup, zero builds).
+free at warmup (``launch.tuning.adopt`` — a pure cache lookup, zero builds).
 
   # everything a serving + training deployment of an arch will hit
   PYTHONPATH=src python -m repro.tune_cli --arch llama3_2_1b --reduced \\

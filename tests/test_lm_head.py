@@ -219,7 +219,7 @@ def _batch(cfg, seed=0, b=2, s=16):
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_fused_loss_matches_default_loss(backend):
     cfg = _small_cfg()
-    m0 = LM(cfg)
+    m0 = LM(cfg, fused_head=False)
     m1 = LM(cfg, fused_head=True, head_backend=backend)
     params = m0.init(jax.random.PRNGKey(0))
     batch = _batch(cfg)
@@ -234,7 +234,7 @@ def test_fused_loss_grads_match_default():
     cfg = _small_cfg()
     params = LM(cfg).init(jax.random.PRNGKey(1))
     batch = _batch(cfg, seed=1)
-    g0 = jax.grad(lambda p: LM(cfg).loss(p, batch)[0])(params)
+    g0 = jax.grad(lambda p: LM(cfg, fused_head=False).loss(p, batch)[0])(params)
     g1 = jax.grad(lambda p: LM(cfg, fused_head=True).loss(p, batch)[0])(params)
     for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
         np.testing.assert_allclose(np.asarray(a, np.float32),
@@ -246,7 +246,7 @@ def test_fused_loss_grads_match_default():
 def test_greedy_step_argmax_matches_greedy_token_exactly(backend):
     cfg = _small_cfg()
     model = LM(cfg, fused_head=True, head_backend=backend)
-    baseline = LM(cfg)
+    baseline = LM(cfg, fused_head=False)
     params = model.init(jax.random.PRNGKey(2))
     tokens = _batch(cfg, seed=2)["tokens"]
     _, cache = model.prefill(params, tokens[:, :8], max_len=16)
@@ -266,13 +266,13 @@ def test_greedy_step_argmax_matches_greedy_token_exactly(backend):
 
 def test_greedy_step_unfused_fallback():
     cfg = _small_cfg()
-    model = LM(cfg)                          # fused_head=False
+    model = LM(cfg, fused_head=False)
     params = model.init(jax.random.PRNGKey(3))
     tokens = _batch(cfg, seed=3)["tokens"]
     _, cache = model.prefill(params, tokens[:, :8], max_len=16)
     tok, logits, cache = model.greedy_step(params, tokens[:, 8:9], cache)
-    ref_logits, _ = LM(cfg).decode_step(params, tokens[:, 8:9],
-                                        jax.tree.map(lambda a: a, cache))
+    ref_logits, _ = LM(cfg, fused_head=False).decode_step(
+        params, tokens[:, 8:9], jax.tree.map(lambda a: a, cache))
     assert (np.asarray(tok) == np.asarray(model.greedy_token(logits))).all()
 
 
@@ -280,7 +280,7 @@ def test_prefill_last_logits_match_unfused():
     cfg = _small_cfg()
     params = LM(cfg).init(jax.random.PRNGKey(4))
     tokens = _batch(cfg, seed=4)["tokens"]
-    l0, _ = LM(cfg).prefill(params, tokens)
+    l0, _ = LM(cfg, fused_head=False).prefill(params, tokens)
     l1, _ = LM(cfg, fused_head=True).prefill(params, tokens)
     np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
                                rtol=1e-4, atol=1e-4)

@@ -303,13 +303,14 @@ def test_serve_step_greedy_routes_through_greedy_step():
     tokens = jnp.asarray(np.random.RandomState(6).randint(
         0, cfg.vocab_size, (2, 1)))
 
-    step, sh = build_serve_step(model, mesh, batch=2, max_len=8)
+    step, sh = build_serve_step(model, mesh, batch=2, max_len=8,
+                                greedy=False)
     assert sh["greedy"] is False
     cache = model.init_cache(2, 8)
     logits, _ = step(params, cache, tokens)
 
-    gstep, gsh = build_serve_step(model, mesh, batch=2, max_len=8,
-                                  greedy=True)
+    # greedy is the DEFAULT now (flipped with the serving engine)
+    gstep, gsh = build_serve_step(model, mesh, batch=2, max_len=8)
     assert gsh["greedy"] is True
     nxt, glogits, _ = gstep(params, model.init_cache(2, 8), tokens)
     np.testing.assert_allclose(np.asarray(glogits), np.asarray(logits),
